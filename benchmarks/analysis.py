@@ -1,0 +1,175 @@
+"""Analytic workload model: MODEL_FLOPS + HBM-traffic estimates per cell.
+
+Used by the roofline (benchmarks/roofline.py) alongside the while-aware
+HLO measurements:
+
+* compute term numerator  — measured HLO dot_flops (exact for matmuls);
+* memory term numerator   — THIS analytic traffic model (CPU-HLO fusion
+  granularity differs from TPU, so a structural estimate is the honest
+  choice; assumptions below);
+* collective term         — measured HLO collective bytes;
+* MODEL_FLOPS             — 6*N_active*D (train) / 2*N_active*D (fwd-only),
+  the "useful compute" yardstick for the HLO/MODEL ratio.
+
+Memory-traffic assumptions (documented per EXPERIMENTS.md §Roofline):
+- weights stream HBM->VMEM once per use: 2 forward passes under full
+  remat + 1 backward = 3 reads (train), 1 read (prefill/decode);
+- optimizer: m/v read+write (fp32-or-moment-dtype), params read+write;
+- activations: residual stream + block intermediates, written+read once
+  each way, with full-block remat doubling the forward share;
+- decode: KV cache read per token dominates (+ small write).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES, VISION_PATCHES
+
+# hardware constants (TPU v5e-class target, per the assignment)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link (ICI)
+
+
+def _nonembed_params(cfg: ModelConfig, active: bool) -> float:
+    from repro.models import encdec, lm
+    from repro.nn.spec import tree_params
+
+    mod = encdec if cfg.family == "audio" else lm
+    total = cfg.active_params_count() if active else tree_params(mod.model_spec(cfg))
+    embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return float(total - embed)
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """6*N_active*D for training, 2*N_active*D forward-only (global)."""
+    shape = SHAPES[shape_name]
+    n_act = _nonembed_params(cfg, active=True)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * d
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficModel:
+    weights: float
+    optimizer: float
+    activations: float
+    cache: float
+
+    @property
+    def total(self) -> float:
+        return self.weights + self.optimizer + self.activations + self.cache
+
+
+def _act_bytes_per_layer(cfg: ModelConfig, tokens_local: float) -> float:
+    """Forward intermediate traffic per layer per token (bytes, bf16)."""
+    d = cfg.d_model
+    width = 0.0
+    width += 6 * d  # norms, residual adds, block io
+    if cfg.attn is not None:
+        width += 2 * cfg.attn.n_heads * cfg.attn.head_dim  # q, attn out
+        width += 2 * cfg.attn.n_kv_heads * cfg.attn.head_dim  # k, v
+    if cfg.moe is not None:
+        width += 3 * cfg.moe.top_k * cfg.moe.d_ff_expert
+        width += 2 * cfg.moe.n_shared_experts * cfg.moe.d_ff_expert
+    if cfg.d_ff:
+        width += 3 * cfg.d_ff  # glu in/gate/out
+    if cfg.ssm is not None:
+        width += 6 * cfg.ssm.expand * d
+    if cfg.rglru is not None:
+        width += 6 * (cfg.rglru.d_rnn or d)
+    return 2.0 * width * tokens_local
+
+
+def hbm_traffic(cfg: ModelConfig, shape_name: str, n_chips: int,
+                moment_bytes: int = 4) -> TrafficModel:
+    """Per-chip HBM bytes for one step (analytic)."""
+    from repro.models import encdec, lm
+    from repro.nn.spec import tree_params
+
+    shape = SHAPES[shape_name]
+    mod = encdec if cfg.family == "audio" else lm
+    n_total = tree_params(mod.model_spec(cfg))
+    p2_local = 2.0 * n_total / n_chips  # bf16 weight bytes per chip
+
+    tokens_local = shape.global_batch * shape.seq_len / n_chips
+    n_layers = cfg.n_layers + (cfg.encoder.n_layers if cfg.encoder else 0)
+
+    if shape.kind == "train":
+        weights = 3.0 * p2_local  # fwd + remat-recompute + bwd reads
+        optimizer = (
+            2.0 * 2 * moment_bytes * n_total / n_chips  # m, v read+write
+            + 2.0 * p2_local  # param read + write
+            + 2.0 * p2_local  # grads write + read
+        )
+        act = n_layers * _act_bytes_per_layer(cfg, tokens_local) * 2.5
+        return TrafficModel(weights=weights, optimizer=optimizer,
+                            activations=act, cache=0.0)
+
+    if shape.kind == "prefill":
+        weights = p2_local
+        act = n_layers * _act_bytes_per_layer(cfg, tokens_local)
+        # cache write
+        cache = _cache_bytes(cfg, shape.global_batch, shape.seq_len) / n_chips
+        return TrafficModel(weights=weights, optimizer=0.0, activations=act,
+                            cache=cache)
+
+    # decode: weights once (active only for MoE), cache read + write
+    n_active = cfg.active_params_count() if cfg.moe else n_total
+    weights = 2.0 * n_active / n_chips
+    cache = _cache_bytes(cfg, shape.global_batch, shape.seq_len) / n_chips
+    act = n_layers * _act_bytes_per_layer(cfg, shape.global_batch / n_chips)
+    return TrafficModel(weights=weights, optimizer=0.0, activations=act,
+                        cache=cache)
+
+
+def _cache_bytes(cfg: ModelConfig, batch: int, cache_len: int) -> float:
+    total = 0.0
+    if cfg.family == "audio":
+        kv = cfg.attn.n_kv_heads * cfg.attn.head_dim
+        total += cfg.n_layers * batch * cache_len * 2 * kv * 2.0  # self k+v
+        total += cfg.n_layers * batch * cfg.encoder.n_frames * 2 * kv * 2.0
+        return total
+    for bd in cfg.layer_defs:
+        if bd.mixer == "attn":
+            slots = min(bd.window, cache_len) if bd.window else cache_len
+            kv = cfg.attn.n_kv_heads * cfg.attn.head_dim
+            total += batch * slots * 2 * kv * 2.0
+        elif bd.mixer == "rglru":
+            total += batch * (cfg.rglru.d_rnn or cfg.d_model) * 4.0
+        else:  # ssd
+            d_inner = cfg.ssm.expand * cfg.d_model
+            heads = d_inner // cfg.ssm.head_dim
+            total += batch * heads * cfg.ssm.head_dim * cfg.ssm.d_state * 4.0
+    return total
+
+
+def roofline_terms(cfg: ModelConfig, shape_name: str, n_chips: int,
+                   dot_flops_per_dev: float, coll_bytes_per_dev: float) -> dict:
+    traffic = hbm_traffic(cfg, shape_name, n_chips)
+    t_compute = dot_flops_per_dev / PEAK_FLOPS
+    t_memory = traffic.total / HBM_BW
+    t_coll = coll_bytes_per_dev / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape_name)
+    hlo_global = dot_flops_per_dev * n_chips
+    step_s = max(terms.values())
+    return {
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "step_time_s": step_s,
+        "roofline_frac": t_compute / step_s if step_s else 0.0,
+        "mfu": mf / n_chips / PEAK_FLOPS / step_s if step_s else 0.0,
+        "traffic": dataclasses.asdict(traffic),
+    }

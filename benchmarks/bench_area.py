@@ -1,0 +1,18 @@
+"""Fig. 3a: XBAR area/timing with and without multicast support."""
+import time
+
+from repro.core.area import area_table
+
+
+def run() -> list[str]:
+    t0 = time.perf_counter()
+    rows = area_table((2, 4, 8, 16))
+    dt = (time.perf_counter() - t0) / len(rows) * 1e6
+    out = []
+    for r in rows:
+        out.append(
+            f"fig3a_area_{r.n_ports}x{r.n_ports},{dt:.2f},"
+            f"base={r.base_kge:.1f}kGE mcast={r.mcast_kge:.1f}kGE "
+            f"overhead={100*r.overhead_frac:.1f}% fmax={r.freq_ghz_mcast:.2f}GHz"
+        )
+    return out

@@ -1,0 +1,41 @@
+"""Pallas kernel sanity timings (interpret mode on CPU — correctness
+path; TPU wall-clock comes from the Mosaic build on real hardware)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn(*args).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[str]:
+    k = jax.random.PRNGKey(0)
+    rows = []
+
+    from repro.kernels.flash_attention.ops import flash
+
+    q = jax.random.normal(k, (1, 4, 256, 64), jnp.float32)
+    kv = jax.random.normal(k, (1, 2, 256, 64), jnp.float32)
+    rows.append(f"kernel_flash_attn,{_time(lambda a: flash(a, kv, kv, bq=64, bk=64), q):.1f},GQA 4q/2kv s256 d64")
+
+    from repro.kernels.rglru.ops import lru_scan
+
+    a = jax.nn.sigmoid(jax.random.normal(k, (1, 256, 256)))
+    x = jax.random.normal(k, (1, 256, 256))
+    rows.append(f"kernel_rglru,{_time(lambda u: lru_scan(u, x, bs=128, bd=128), a):.1f},scan s256 d256")
+
+    from repro.kernels.ssd.ops import ssd_core
+
+    xdt = jax.random.normal(k, (1, 2, 256, 64), jnp.float32)
+    bm = jax.random.normal(k, (1, 256, 64), jnp.float32)
+    log_a = -jax.nn.softplus(jax.random.normal(k, (1, 2, 256)))
+    rows.append(
+        f"kernel_ssd,{_time(lambda u: ssd_core(u, bm, bm, log_a, chunk=64), xdt):.1f},chunked s256 P64 N64"
+    )
+    return rows

@@ -1,0 +1,31 @@
+"""Fig. 3b: 1-to-N multicast DMA microbenchmark (cycle model)."""
+import math
+import time
+
+from repro.core.noc import OccamyNoc, microbenchmark_table
+
+
+def run() -> list[str]:
+    noc = OccamyNoc()
+    t0 = time.perf_counter()
+    rows = microbenchmark_table(noc)
+    dt = (time.perf_counter() - t0) / len(rows) * 1e6
+    out = []
+    for r in rows:
+        extra = ""
+        if "speedup_sw" in r:
+            extra = f" sw={r['speedup_sw']:.2f}x hw/sw={r['hw_over_sw']:.2f}x"
+        out.append(
+            f"fig3b_n{r['n_clusters']}_s{r['size']//1024}k,{dt:.2f},"
+            f"hw={r['speedup_hw']:.2f}x p={r['amdahl_p']:.3f}{extra}"
+        )
+    # headline numbers
+    ratios = [
+        noc.one_to_all(s, 32, "sw_tree").cycles / noc.one_to_all(s, 32, "hw_mcast").cycles
+        for s in (4096, 8192, 16384, 32768)
+    ]
+    geo = math.prod(ratios) ** 0.25
+    out.append(f"fig3b_headline,{dt:.2f},"
+               f"speedup32@32k={noc.speedup(32768,32):.1f}x(paper16.2) "
+               f"geomean_hw_over_sw={geo:.2f}x(paper5.6)")
+    return out

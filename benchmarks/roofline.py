@@ -1,0 +1,83 @@
+"""Roofline table: dryrun.jsonl -> per-cell 3-term analysis (§Roofline).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [dryrun.jsonl] [--mesh single]
+
+Prints a markdown table (pasted into EXPERIMENTS.md) with, per cell:
+compute/memory/collective seconds, the dominant term, MODEL_FLOPS /
+HLO_FLOPs (useful-compute ratio), roofline fraction and MFU.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.analysis import roofline_terms
+from repro.configs import get_config
+
+
+def load_records(path: str, mesh: str = "single") -> list[dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("status") == "ok" and r.get("mesh") == mesh:
+                recs.append(r)
+    return recs
+
+
+def build_table(recs: list[dict]) -> list[dict]:
+    rows = []
+    for r in recs:
+        cfg = get_config(r["arch"])
+        n_chips = 1
+        for v in r["mesh_shape"].values():
+            n_chips *= v
+        terms = roofline_terms(
+            cfg, r["shape"], n_chips,
+            dot_flops_per_dev=r["hlo"]["dot_flops"],
+            coll_bytes_per_dev=r["hlo"]["collective_bytes"],
+        )
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "fsdp": r.get("fsdp", False), **terms,
+            "arg_gb": r["memory"].get("argument_size_in_bytes", 0) / 1e9,
+            "temp_gb": r["memory"].get("temp_size_in_bytes", 0) / 1e9,
+        })
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | coll s | bound | "
+           "useful | roofline | MFU | arg GB | temp GB |")
+    sep = "|" + "---|" * 11
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.2f} | {r['mfu']:.3f} | "
+            f"{r['arg_gb']:.1f} | {r['temp_gb']:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun.jsonl"
+    mesh = "single"
+    if "--mesh" in sys.argv:
+        mesh = sys.argv[sys.argv.index("--mesh") + 1]
+    rows = build_table(load_records(path, mesh))
+    print(fmt_table(rows))
+    # headline: the three hillclimb candidates
+    worst = min(rows, key=lambda r: r["roofline_frac"])
+    coll = max(rows, key=lambda r: r["collective_s"])
+    print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
+          f"({worst['roofline_frac']:.2f})")
+    print(f"most collective-bound:  {coll['arch']} x {coll['shape']} "
+          f"({coll['collective_s']:.3e}s)")
+
+
+if __name__ == "__main__":
+    main()

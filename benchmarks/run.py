@@ -1,0 +1,41 @@
+"""Benchmark orchestrator — one bench per paper table/figure + the TPU
+adaptations.  Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--skip-subprocess]
+
+Benches:
+  fig3a_*      XBAR area/timing model          (paper fig. 3a)
+  fig3b_*      1-to-N DMA microbenchmark       (paper fig. 3b)
+  fig3c_*      Occamy matmul roofline + kernel (paper fig. 3c)
+  fig3b_tpu_*  collective-bytes hierarchy on the TPU mesh (adaptation)
+  kernel_*     Pallas kernel interpret-mode sanity timings
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_area, bench_matmul_roofline, bench_microbench
+
+    rows: list[str] = []
+    rows += bench_area.run()
+    rows += bench_microbench.run()
+    rows += bench_matmul_roofline.run()
+
+    if "--skip-subprocess" not in sys.argv:
+        from benchmarks import bench_collective_bytes
+
+        rows += bench_collective_bytes.run()
+
+    from benchmarks import bench_kernels
+
+    rows += bench_kernels.run()
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""The paper's three distribution strategies on a JAX device mesh.
+
+Run with fake devices to see the collective structure:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src:. python examples/multicast_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.mcast import make_broadcast_fn, mcast_matmul
+from repro.launch.hlo import analyze_compiled
+
+
+def main() -> None:
+    n = len(jax.devices())
+    if n < 8:
+        print(f"only {n} device(s); run with "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return
+    mesh = jax.make_mesh((8,), ("data",))
+    x = jnp.zeros((2048, 1024), jnp.bfloat16)  # 4 MiB payload
+
+    print("distributing a 4 MiB buffer to 8 devices:")
+    print(f"{'mode':10s} {'collectives':38s} {'link bytes/dev':>15s}")
+    for mode in ("unicast", "sw_tree", "hw"):
+        f = make_broadcast_fn(mesh, x.shape, x.dtype, mode)
+        with jax.set_mesh(mesh):
+            compiled = jax.jit(f).lower(x).compile()
+        a = analyze_compiled(compiled, 8)
+        print(f"{mode:10s} {str(a['collective_counts']):38s} "
+              f"{a['collective_bytes']/1e6:12.1f} MB")
+
+    # the paper's matmul pattern: B sharded ("in the LLC"), multicast to all
+    xx = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 32))
+    outs = {}
+    for mode in ("unicast", "sw_tree", "hw"):
+        with jax.set_mesh(mesh):
+            outs[mode] = np.asarray(mcast_matmul(xx, w, mesh, mode=mode))
+    assert all(np.allclose(v, xx @ w, atol=1e-4) for v in outs.values())
+    print("\nmcast_matmul: all three modes agree with x @ w ✓")
+    print("hw multicast = one all-gather: the ICI is the multicast fabric.")
+
+
+if __name__ == "__main__":
+    main()

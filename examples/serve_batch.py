@@ -1,0 +1,30 @@
+"""Serve a small model with batched requests + continuous batching.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import Request, Server
+from repro.models import lm
+
+
+def main() -> None:
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    server = Server(cfg, params, max_batch=4, cache_len=128)
+
+    rng = np.random.default_rng(7)
+    requests = [
+        Request(rid=i, prompt=list(rng.integers(0, cfg.vocab, size=int(n))), max_new=12)
+        for i, n in enumerate(rng.integers(4, 20, size=10))
+    ]
+    done = server.run(requests)
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"request {r.rid:2d}: {len(r.prompt):2d} prompt toks -> {r.out}")
+    print(f"\nserved {len(done)} requests through 4 continuous-batching slots")
+
+
+if __name__ == "__main__":
+    main()

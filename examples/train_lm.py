@@ -1,0 +1,46 @@
+"""End-to-end driver: train a ~100M-param qwen-family LM for a few hundred
+steps on the synthetic patterned stream, with checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(CPU-sized by default: a ~10M reduced model unless --full100m is given;
+the --full100m variant is the assignment's "~100M for a few hundred
+steps" configuration and takes a while on 1 CPU core.)
+"""
+import argparse
+
+from repro.launch.train import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full100m", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    class A:
+        arch = "qwen1.5-0.5b"
+        reduced = not args.full100m
+        steps = args.steps
+        batch = 8
+        seq = 128
+        lr = 3e-3
+        seed = 0
+        mesh_data = 1
+        mesh_model = 1
+        fsdp = False
+        compress = False
+        ckpt_dir = "/tmp/repro_train_lm"
+        ckpt_every = 100
+        resume = False
+        log_every = 20
+        simulate_failure_at = None
+
+    out = train_loop(A)
+    losses = out["losses"]
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+    assert losses[-1] < losses[0], "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

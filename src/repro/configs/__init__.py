@@ -1,0 +1,2 @@
+"""Architecture registry: one module per assigned architecture."""
+from repro.configs.registry import ARCHS, get_config

@@ -1,0 +1,28 @@
+"""Architecture registry: ``get_config(arch_id)`` -> ModelConfig."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS: tuple[str, ...] = (
+    "recurrentgemma-2b",
+    "deepseek-7b",
+    "qwen1.5-0.5b",
+    "command-r-35b",
+    "gemma2-9b",
+    "whisper-medium",
+    "llama4-maverick-400b-a17b",
+    "moonshot-v1-16b-a3b",
+    "mamba2-780m",
+    "pixtral-12b",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get_config(arch: str, *, reduced: bool = False):
+    """Load an architecture config; ``reduced=True`` returns the small
+    same-family config used by the CPU smoke tests."""
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.reduced_config() if reduced else mod.config()

@@ -1,0 +1,106 @@
+"""Assigned input shapes and per-(arch x shape) input specs.
+
+Four shapes per architecture (40 cells total):
+
+* ``train_4k``     seq 4096,   global batch 256  -> lowers train_step
+* ``prefill_32k``  seq 32768,  global batch 32   -> lowers prefill_step
+* ``decode_32k``   KV len 32768, global batch 128 -> lowers serve_step
+* ``long_500k``    KV len 524288, global batch 1  -> lowers serve_step,
+  sub-quadratic archs only (ssm / hybrid): recurrentgemma-2b, mamba2-780m.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for every input of the corresponding step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+VISION_PATCHES = 1024  # pixtral: image patches prepended to the text
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCfg("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCfg("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCfg("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """Is this (arch x shape) cell runnable?  Returns (ok, reason)."""
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "full-attention arch: 500k dense KV decode is the quadratic case the assignment skips"
+    if shape.kind == "decode" and not cfg.has_decoder:
+        return False, "encoder-only arch has no decode step"
+    return True, ""
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for the step inputs of this cell.
+
+    Keys match the step-builder signatures in ``repro.dist.step``:
+    train:   tokens, labels [, frontend_embeds | frames]
+    prefill: tokens [, frontend_embeds | frames]
+    decode:  cache, tokens, index
+    """
+    from repro.models import encdec, lm  # local import to avoid cycles
+
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape_name} skipped: {reason}")
+    b, s = shape.global_batch, shape.seq_len
+
+    if cfg.family == "audio":  # enc-dec: frames + decoder tokens
+        frames = jax.ShapeDtypeStruct(
+            (b, cfg.encoder.n_frames, cfg.frontend_dim), jnp.bfloat16
+        )
+        if shape.kind == "train":
+            return {"tokens": _tok(b, s), "labels": _tok(b, s), "frames": frames}
+        if shape.kind == "prefill":
+            return {"tokens": _tok(b, s), "frames": frames}
+        return {
+            "cache": encdec.cache_spec(cfg, b, s),
+            "tokens": _tok(b, 1),
+            "index": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+        emb = jax.ShapeDtypeStruct((b, VISION_PATCHES, cfg.frontend_dim), jnp.bfloat16)
+        text = _tok(b, s - VISION_PATCHES)
+        if shape.kind == "train":
+            return {"tokens": text, "labels": _tok(b, s), "frontend_embeds": emb}
+        return {"tokens": text, "frontend_embeds": emb}
+
+    if shape.kind == "train":
+        return {"tokens": _tok(b, s), "labels": _tok(b, s)}
+    if shape.kind == "prefill":
+        return {"tokens": _tok(b, s)}
+    return {
+        "cache": lm.cache_spec(cfg, b, s),
+        "tokens": _tok(b, 1),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cells(cfg: ModelConfig) -> list[str]:
+    """The applicable shape names for an arch."""
+    return [n for n in SHAPES if applicable(cfg, n)[0]]

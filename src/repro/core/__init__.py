@@ -1,0 +1,48 @@
+"""The paper's contribution: multicast-capable AXI crossbar + Occamy model.
+
+* ``encoding``  — mask-form multi-address encoding + address decoder
+* ``xbar``      — protocol-faithful multicast crossbar simulator
+* ``timing``    — calibrated latency/bandwidth model
+* ``noc``       — Occamy two-level NoC + fig. 3b microbenchmark
+* ``occamy``    — system model + fig. 3c matmul evaluation
+* ``area``      — fig. 3a area/timing model
+"""
+from repro.core.encoding import (
+    ADDR_WIDTH,
+    AddressDecoder,
+    AddrRule,
+    Ife,
+    Mfe,
+    cluster_window,
+    ife_to_mfe,
+    mcast_request_for_clusters,
+    mfe_for_address_set,
+    mfe_to_ife,
+)
+from repro.core.noc import NocConfig, OccamyNoc, microbenchmark_table
+from repro.core.occamy import OccamyConfig, OccamySystem
+from repro.core.timing import TimingModel
+from repro.core.xbar import DeadlockError, McastXbar, Resp, WriteTxn
+
+__all__ = [
+    "ADDR_WIDTH",
+    "AddressDecoder",
+    "AddrRule",
+    "DeadlockError",
+    "Ife",
+    "McastXbar",
+    "Mfe",
+    "NocConfig",
+    "OccamyConfig",
+    "OccamyNoc",
+    "OccamySystem",
+    "Resp",
+    "TimingModel",
+    "WriteTxn",
+    "cluster_window",
+    "ife_to_mfe",
+    "mcast_request_for_clusters",
+    "mfe_for_address_set",
+    "mfe_to_ife",
+    "microbenchmark_table",
+]

@@ -1,0 +1,69 @@
+"""Deterministic synthetic data pipeline, host-sharded.
+
+Every (step, shard) cell is a pure function of the seed, so:
+
+* any worker can regenerate any shard (straggler takeover / elastic
+  rescale need no data re-coordination),
+* restarts resume bit-identically from the checkpointed step,
+* multi-host loading builds each device's shard locally via
+  ``jax.make_array_from_callback`` (no full-batch host materialisation).
+
+The token stream is a stationary Markov-ish mixture (not uniform noise)
+so that training losses show real learnable structure in the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_patterns: int = 64  # learnable structure: repeated n-gram patterns
+
+
+def _tokens_for(cfg: DataConfig, step: int, start_row: int, n_rows: int) -> np.ndarray:
+    """Deterministic (step, row-range) -> int32 tokens (n_rows, seq+1)."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, start_row, n_rows])
+    )
+    # patterned stream: each row stitches together random 16-token motifs
+    # drawn from a fixed per-seed motif bank => next-token is learnable.
+    bank_rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, 7]))
+    bank = bank_rng.integers(0, cfg.vocab, size=(cfg.n_patterns, 16), dtype=np.int64)
+    n_motifs = (cfg.seq_len + 1 + 15) // 16
+    idx = rng.integers(0, cfg.n_patterns, size=(n_rows, n_motifs))
+    rows = bank[idx].reshape(n_rows, -1)[:, : cfg.seq_len + 1]
+    return rows.astype(np.int32)
+
+
+def global_batch_np(cfg: DataConfig, step: int) -> dict[str, np.ndarray]:
+    toks = _tokens_for(cfg, step, 0, cfg.global_batch)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def sharded_batch(cfg: DataConfig, step: int, mesh, batch_axes) -> dict[str, jax.Array]:
+    """Build the global batch directly as sharded device arrays: each
+    addressable shard is generated locally from (step, row range)."""
+    sharding = NamedSharding(mesh, P(batch_axes, None))
+    shape = (cfg.global_batch, cfg.seq_len)
+
+    def make(name: str, col0: int):
+        def cb(index):
+            rows = index[0]
+            start = rows.start or 0
+            stop = rows.stop if rows.stop is not None else cfg.global_batch
+            t = _tokens_for(cfg, step, start, stop - start)
+            return t[:, col0 : col0 + cfg.seq_len]
+
+        return jax.make_array_from_callback(shape, sharding, cb)
+
+    return {"tokens": make("tokens", 0), "labels": make("labels", 1)}

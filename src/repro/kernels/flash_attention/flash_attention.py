@@ -1,0 +1,118 @@
+"""Blockwise (flash) attention Pallas kernel with GQA + local windows.
+
+Grid: (batch * n_heads, q_blocks, kv_blocks); the kv axis is sequential
+("arbitrary") so the running-softmax state (m, l, acc) lives in VMEM
+scratch across kv steps.  GQA is handled in the K/V index maps (query
+head h reads kv head h // group) — no materialised head repetition.
+Causal and sliding-window masks are position-based, computed in-kernel.
+
+VMEM working set per step: bq*d + bk*d (+ bq*bk fp32 scores), MXU-aligned
+defaults bq = bk = 128, head_dim padded to a multiple of 128 upstream.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0**30
+
+
+def _flash_body(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, kv_steps: int, bq: int, bk: int, causal: bool, window: int | None,
+    scale: float, softcap: float | None,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]  # (bq, d)
+    k = k_ref[0, 0]  # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0, 0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == kv_steps - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (batch, n_heads, seq_q, head_dim)
+    k: jax.Array,  # (batch, n_kv_heads, seq_k, head_dim)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    assert h % kvh == 0
+    group = h // kvh
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    kv_steps = sk // bk
+    grid = (b * h, sq // bq, kv_steps)
+    scale = 1.0 / math.sqrt(d)
+
+    body = functools.partial(
+        _flash_body, kv_steps=kv_steps, bq=bq, bk=bk, causal=causal,
+        window=window, scale=scale, softcap=softcap,
+    )
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bh, qi, ki: (bh // h, bh % h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda bh, qi, ki: (bh // h, (bh % h) // group, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda bh, qi, ki: (bh // h, (bh % h) // group, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bh, qi, ki: (bh // h, bh % h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # running max
+            pltpu.VMEM((bq, 1), jnp.float32),  # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),  # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q, k, v)

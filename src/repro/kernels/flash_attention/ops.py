@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "bq", "bk")
+)
+def flash(q, k, v, *, causal=True, window=None, softcap=None, bq=128, bk=128):
+    return flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, interpret=INTERPRET,
+    )

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30
+
+
+def attention_ref(
+    q: jax.Array,  # (b, h, sq, d)
+    k: jax.Array,  # (b, kvh, sk, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / math.sqrt(d)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= qp - kp < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

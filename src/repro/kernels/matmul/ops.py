@@ -1,0 +1,26 @@
+"""Jit'd public wrappers for the Occamy-schedule matmul kernels.
+
+On CPU (this container) the kernels run in interpret mode; on TPU they
+compile through Mosaic.  ``INTERPRET`` flips automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.matmul.matmul import matmul_mcast, matmul_unicast
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk"))
+def mcast_matmul(a, b, *, bn: int = 128, bk: int = 128):
+    """Multicast-schedule matmul (one B fetch per tile)."""
+    return matmul_mcast(a, b, bn=bn, bk=bk, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def unicast_matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Multiple-unicast-schedule matmul (B re-fetched per row block)."""
+    return matmul_unicast(a, b, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)

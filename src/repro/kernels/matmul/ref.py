@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the matmul kernels."""
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """fp32-accumulated matmul, output in a.dtype (matches the kernels)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

@@ -1,0 +1,16 @@
+"""Jit'd public wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru.rglru import rglru_scan
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "bs"))
+def lru_scan(a, b, *, bd: int = 256, bs: int = 256):
+    """h_t = a_t h_{t-1} + b_t via the Pallas kernel."""
+    return rglru_scan(a, b, bd=bd, bs=bs, interpret=INTERPRET)

@@ -1,0 +1,19 @@
+"""Naive-scan oracle for the RG-LRU recurrence kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t, h_{-1} = 0.  (batch, seq, d) -> same."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(
+        step,
+        jnp.zeros((a.shape[0], a.shape[2]), a.dtype),
+        (a.transpose(1, 0, 2), b.transpose(1, 0, 2)),
+    )
+    return hs.transpose(1, 0, 2)

@@ -1,0 +1,64 @@
+"""RG-LRU linear-recurrence Pallas kernel (Griffin / recurrentgemma).
+
+Computes ``h_t = a_t * h_{t-1} + b_t`` over time, given per-step decays
+``a`` and inputs ``b`` (the gate/decay math stays in XLA where it is
+matmul-bound).  Grid: (batch, d_blocks, s_blocks); the sequence axis is
+sequential ("arbitrary") with the carried state in VMEM scratch, so
+arbitrarily long sequences stream through fixed VMEM.
+
+Block: (1, bs, bd) with bd a multiple of 128 (vector-lane aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_body(a_ref, b_ref, o_ref, h_ref, *, bs: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0]  # (bs, bd) fp32
+    b = b_ref[0]
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t, :] = h
+        return h
+
+    h_ref[0] = jax.lax.fori_loop(0, bs, step, h_ref[0])
+
+
+def rglru_scan(
+    a: jax.Array,  # (batch, seq, d) fp32 per-step decay
+    b: jax.Array,  # (batch, seq, d) fp32 gated input
+    *,
+    bd: int = 256,
+    bs: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, s, d = a.shape
+    bd = min(bd, d)
+    bs = min(bs, s)
+    assert d % bd == 0 and s % bs == 0
+    grid = (bsz, d // bd, s // bs)
+    return pl.pallas_call(
+        functools.partial(_rglru_body, bs=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, bs, bd), lambda bi, di, si: (bi, si, di)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bd), lambda bi, di, si: (bi, si, di)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the SSD chunked-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ssd import ssd_scan
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_core(xdt, b, c, log_a, *, chunk: int = 128):
+    """SSD core: takes per-step log decays, computes within-chunk cumsums
+    and runs the Pallas kernel.  log_a: (bsz, h, s)."""
+    bsz, h, s = log_a.shape
+    lc = log_a.reshape(bsz, h, s // chunk, chunk)
+    lcum = jnp.cumsum(lc, axis=-1).reshape(bsz, h, s, 1)
+    return ssd_scan(xdt, b, c, lcum, chunk=chunk, interpret=INTERPRET)

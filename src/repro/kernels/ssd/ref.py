@@ -1,0 +1,34 @@
+"""Naive sequential-scan oracle for the SSD kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(xdt, b, c, log_a):
+    """Sequential SSD recurrence.
+
+    xdt: (bsz, h, s, P) fp32; b/c: (bsz, s, N); log_a: (bsz, h, s).
+    Returns y: (bsz, h, s, P).
+    """
+    bsz, h, s, p = xdt.shape
+    n = b.shape[-1]
+
+    def step(hstate, inp):
+        x_t, b_t, c_t, la_t = inp  # (bsz,h,P), (bsz,N), (bsz,N), (bsz,h)
+        hstate = jnp.exp(la_t)[..., None, None] * hstate + jnp.einsum(
+            "bhp,bn->bhpn", x_t, b_t
+        )
+        y_t = jnp.einsum("bhpn,bn->bhp", hstate, c_t)
+        return hstate, y_t
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step,
+        h0,
+        (
+            xdt.transpose(2, 0, 1, 3),
+            b.transpose(1, 0, 2),
+            c.transpose(1, 0, 2),
+            log_a.transpose(2, 0, 1),
+        ),
+    )
+    return ys.transpose(1, 2, 0, 3)

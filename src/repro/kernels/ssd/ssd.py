@@ -1,0 +1,88 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel.
+
+Computes the SSD core given pre-computed dt-scaled inputs and log-decays
+(projections/conv/gating stay in XLA):
+
+    H_t = exp(l_t) * H_{t-1} + xdt_t (x) B_t
+    y_t = C_t . H_t
+
+Grid: (batch, heads, chunks); the chunk axis is sequential ("arbitrary"),
+carrying the (P x N) state in VMEM scratch — the TPU analogue of the
+mamba2 Triton kernel's split into intra-chunk (quadratic, MXU-friendly)
+and inter-chunk (recurrent) terms.  B/C are shared across heads (single
+group) and indexed by (batch, chunk) only — no per-head duplication.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_body(xdt_ref, b_ref, c_ref, lcum_ref, o_ref, h_ref, *, q: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    xdt = xdt_ref[0, 0]  # (Q, P) fp32
+    bmat = b_ref[0]  # (Q, N)
+    cmat = c_ref[0]  # (Q, N)
+    lcum = lcum_ref[0, 0]  # (Q, 1) within-chunk cumulative log decay
+
+    # intra-chunk: y_i = sum_{j<=i} (C_i.B_j) exp(l_i - l_j) xdt_j
+    scores = jnp.dot(cmat, bmat.T, preferred_element_type=jnp.float32)
+    seg = lcum - lcum.T  # (Q, Q) = l_i - l_j
+    causal = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (q, q), 1
+    )
+    # mask inside the exp (j > i would overflow and NaN any grads)
+    m = jnp.exp(jnp.where(causal, seg, -1e30)) * scores
+    y = jnp.dot(m, xdt, preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_i += exp(l_i) * C_i . H_prev
+    h_prev = h_ref[...]  # (P, N)
+    y += jnp.exp(lcum) * jnp.dot(cmat, h_prev.T, preferred_element_type=jnp.float32)
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+    # state update: H = exp(l_Q) H_prev + sum_j exp(l_Q - l_j) xdt_j (x) B_j
+    ltot = lcum[q - 1, 0]
+    w = jnp.exp(ltot - lcum)  # (Q, 1)
+    h_ref[...] = jnp.exp(ltot) * h_prev + jnp.dot(
+        (xdt * w).T, bmat, preferred_element_type=jnp.float32
+    )
+
+
+def ssd_scan(
+    xdt: jax.Array,  # (batch, heads, seq, P) fp32: dt_t * x_t
+    b: jax.Array,  # (batch, seq, N) fp32
+    c: jax.Array,  # (batch, seq, N) fp32
+    lcum_chunk: jax.Array,  # (batch, heads, seq, 1) fp32: within-chunk cumsum(log a)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, h, s, p = xdt.shape
+    n = b.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    grid = (bsz, h, nc)
+    return pl.pallas_call(
+        functools.partial(_ssd_body, q=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda bi, hi, ci: (bi, hi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, s, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xdt, b, c, lcum_chunk)

@@ -1,0 +1,146 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+
+1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+2. builds the step bundle (train/prefill/decode per the shape),
+3. ``jax.jit(fn, in_shardings, out_shardings).lower(*abstract).compile()``
+   — compile success proves the sharding config is coherent (no mismatch,
+   no OOM-at-compile, collectives all partitionable),
+4. records ``memory_analysis`` / ``cost_analysis`` / collective bytes
+   parsed from the compiled HLO into a JSON report consumed by
+   ``benchmarks/roofline.py`` and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, applicable
+from repro.dist.step import build_step
+from repro.launch.hlo import analyze_compiled, cost_summary, memory_summary
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, fsdp: bool = False,
+             compress: bool = False, loss_chunk: int = 512, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    ok, reason = applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kw = {}
+    if SHAPES[shape_name].kind == "train":
+        kw = dict(fsdp=fsdp, compress_pod_grads=compress, loss_chunk=loss_chunk)
+    elif fsdp:
+        kw = dict(fsdp=fsdp)
+    bundle = build_step(cfg, mesh, shape_name, **kw)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(
+            bundle.fn,
+            in_shardings=bundle.in_shardings,
+            out_shardings=bundle.out_shardings,
+        )
+        lowered = jitted.lower(*bundle.abstract_inputs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = memory_summary(compiled)
+    cost = cost_summary(compiled)
+    hlo = analyze_compiled(compiled, n_devices=mesh.size)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "mesh_shape": dict(mesh.shape),
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "fsdp": fsdp,
+        "compress": compress,
+        "memory": mem,
+        "cost": cost,
+        "hlo": {
+            "dot_flops": hlo["dot_flops"],
+            "collective_bytes": hlo["collective_bytes"],
+            "collective_counts": hlo["collective_counts"],
+            "collective_bytes_by_op": hlo["collective_bytes_by_op"],
+            "result_bytes": hlo["result_bytes"],
+        },
+    }
+    if verbose:
+        print(f"[{bundle.name} @ {'multi' if multi_pod else 'single'}] "
+              f"compile {t_compile:.1f}s  "
+              f"argMB/dev {mem.get('argument_mb_per_device', -1):.0f}  "
+              f"tempMB/dev {mem.get('temp_mb_per_device', -1):.0f}  "
+              f"dotTFLOP/dev {hlo['dot_flops']/1e12:.2f}  "
+              f"collMB/dev {hlo['collective_bytes']/1e6:.1f}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="run every applicable cell")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--loss-chunk", type=int, default=512)
+    ap.add_argument("--out", default=None, help="append JSON records to this file")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            cfg = get_config(arch)
+            for shape in SHAPES:
+                if applicable(cfg, shape)[0]:
+                    cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    records = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp, fsdp=args.fsdp,
+                               compress=args.compress, loss_chunk=args.loss_chunk)
+            except Exception as e:  # a failing cell is a bug — surface it
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "multi" if mp else "single",
+                       "status": "error", "error": f"{type(e).__name__}: {e}"}
+            records.append(rec)
+            if args.out:  # append incrementally (long runs survive kills)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

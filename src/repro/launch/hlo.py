@@ -1,0 +1,283 @@
+"""Compiled-HLO analysis with while-loop trip-count awareness.
+
+XLA's ``cost_analysis`` counts each while (``lax.scan``) body ONCE, which
+undercounts a scanned-transformer step by ~n_layers x.  This analyzer
+parses the post-SPMD compiled module, walks the computation call graph
+(entry -> while bodies x known_trip_count -> fusions/conditionals) and
+accumulates, with correct execution multipliers:
+
+* ``dot_flops``        — 2 * prod(result_dims) * prod(contracted_dims)
+                         per dot, the MXU roofline numerator;
+* collective bytes     — result-shape bytes of all-gather / all-reduce /
+                         reduce-scatter / all-to-all / collective-permute
+                         (per-device, since the module is per-device SPMD);
+* ``result_bytes``     — sum of top-level (non-fused) instruction result
+                         sizes: a write-traffic proxy for the memory term
+                         (x2 for read+write is applied by the roofline).
+
+Trip counts come from the ``known_trip_count`` backend config XLA
+attaches to while ops (fallback: the largest s32 constant in the cond
+computation; final fallback 1 with a warning flag).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+[a-z0-9]*|pred)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{|true_computation=|false_computation=)%?([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return m.group(1), [int(d) for d in m.group(2).split(",") if d]
+
+
+class HloAnalysis:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[str]] = {}
+        self.entry: str | None = None
+        self._parse(text)
+
+    def _parse(self, text: str) -> None:
+        cur = None
+        for line in text.splitlines():
+            s = line.rstrip()
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$", s)
+            if m and not s.lstrip().startswith("%param"):
+                cur = m.group(2)
+                self.computations[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if s.strip() == "}":
+                cur = None
+                continue
+            if cur is not None and s.strip():
+                self.computations[cur].append(s.strip())
+        if self.entry is None and self.computations:
+            # entry is the one never referenced by others
+            referenced = set()
+            for insts in self.computations.values():
+                for inst in insts:
+                    referenced.update(_CALLED_RE.findall(inst))
+            for name in self.computations:
+                if name not in referenced:
+                    self.entry = name
+
+    # ------------------------------------------------------------------
+    def _trip_count(self, inst: str) -> tuple[int, bool]:
+        m = re.search(r'known_trip_count.*?"n"\s*:\s*"?(\d+)"?', inst)
+        if m:
+            return int(m.group(1)), True
+        m2 = re.search(r"condition=%?([\w.\-]+)", inst)
+        if m2 and m2.group(1) in self.computations:
+            consts = []
+            for ln in self.computations[m2.group(1)]:
+                consts += [int(c) for c in re.findall(r"constant\((\d+)\)", ln)]
+            if consts:
+                return max(consts), True
+        return 1, False
+
+    def multipliers(self) -> dict[str, float]:
+        """Execution multiplier per computation (call-graph walk)."""
+        mult: dict[str, float] = defaultdict(float)
+        mult[self.entry] = 1.0
+        order = [self.entry]
+        seen = {self.entry}
+        i = 0
+        while i < len(order):
+            comp = order[i]
+            i += 1
+            for inst in self.computations.get(comp, []):
+                callees = _CALLED_RE.findall(inst)
+                if not callees:
+                    continue
+                factor = mult[comp]
+                if re.search(r"\bwhile\(", inst):
+                    n, _ = self._trip_count(inst)
+                    factor *= n
+                for c in callees:
+                    if c not in self.computations:
+                        continue
+                    mult[c] += factor
+                    if c not in seen:
+                        seen.add(c)
+                        order.append(c)
+        return dict(mult)
+
+    # ------------------------------------------------------------------
+    def analyze(self) -> dict:
+        mult = self.multipliers()
+        dot_flops = 0.0
+        coll_bytes = 0.0
+        coll_counts: dict[str, float] = defaultdict(float)
+        coll_bytes_by_op: dict[str, float] = defaultdict(float)
+        result_bytes = 0.0
+        unknown_trips = 0
+
+        # computations only reachable via fusion `calls=`/`to_apply=` hold
+        # fused elementwise ops whose results never hit HBM — exclude them
+        # from the memory proxy (but dots can't appear there on CPU/TPU).
+        fused_only = set()
+        for comp, insts in self.computations.items():
+            for inst in insts:
+                for m in re.finditer(r"(?:calls=|to_apply=)%?([\w.\-]+)", inst):
+                    fused_only.add(m.group(1))
+        for comp, insts in self.computations.items():
+            for inst in insts:
+                if re.search(r"body=|condition=", inst):
+                    for m in re.finditer(r"(?:body=|condition=)%?([\w.\-]+)", inst):
+                        fused_only.discard(m.group(1))
+
+        for comp, insts in self.computations.items():
+            m = mult.get(comp, 0.0)
+            if m == 0.0:
+                continue
+            # symbol table: instruction name -> (dtype, dims)
+            symbols: dict[str, tuple[str, list[int]]] = {}
+            for inst in insts:
+                dm = _DEF_RE.match(inst)
+                if not dm:
+                    continue
+                name, rhs = dm.group(1), dm.group(2)
+                shp = _first_shape(rhs.split("(")[0] if "(" in rhs else rhs)
+                if shp:
+                    symbols[name] = shp
+
+            for inst in insts:
+                dm = _DEF_RE.match(inst)
+                if not dm:
+                    continue
+                name, rhs = dm.group(1), dm.group(2)
+                head = rhs.split("(")[0] if "(" in rhs else rhs
+
+                # --- dots --------------------------------------------------
+                dmatch = re.search(r"\bdot\(%?([\w.\-]+),", rhs)
+                if dmatch and re.search(r"\bdot\(", rhs):
+                    res = _first_shape(head)
+                    lhs_name = dmatch.group(1)
+                    cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                    if res and cdims and lhs_name in symbols:
+                        _, lhs_dims = symbols[lhs_name]
+                        k = 1
+                        for ci in cdims.group(1).split(","):
+                            if ci:
+                                k *= lhs_dims[int(ci)]
+                        nres = 1
+                        for d in res[1]:
+                            nres *= d
+                        dot_flops += m * 2.0 * nres * k
+
+                # --- collectives --------------------------------------------
+                for c in _COLLECTIVES:
+                    if re.search(rf"\b{c}(-start)?\(", rhs) and f"{c}-done(" not in rhs:
+                        b = sum(
+                            _shape_bytes(dt, dims)
+                            for dt, dims in _SHAPE_RE.findall(head)
+                        )
+                        coll_bytes += m * b
+                        coll_counts[c] += m
+                        coll_bytes_by_op[c] += m * b
+                        break
+
+                # --- memory proxy -------------------------------------------
+                if comp not in fused_only:
+                    b = sum(
+                        _shape_bytes(dt, dims)
+                        for dt, dims in _SHAPE_RE.findall(head)
+                    )
+                    result_bytes += m * b
+
+        return {
+            "dot_flops": dot_flops,
+            "collective_bytes": coll_bytes,
+            "collective_counts": dict(coll_counts),
+            "collective_bytes_by_op": dict(coll_bytes_by_op),
+            "result_bytes": result_bytes,
+            "unknown_trip_whiles": unknown_trips,
+        }
+
+
+# ---------------------------------------------------------------------------
+# public API (used by dryrun / roofline / benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def analyze_compiled(compiled, n_devices: int) -> dict:
+    """Full while-aware analysis of a compiled executable (per device)."""
+    text = compiled.as_text()
+    out = HloAnalysis(text).analyze()
+    out["n_devices"] = n_devices
+    out["global_collective_bytes"] = out["collective_bytes"] * n_devices
+    return out
+
+
+def collective_stats(compiled, n_devices: int) -> dict:
+    a = analyze_compiled(compiled, n_devices)
+    return {
+        "per_device_bytes": a["collective_bytes"],
+        "global_bytes": a["global_collective_bytes"],
+        "counts": a["collective_counts"],
+        "bytes_by_op": a["collective_bytes_by_op"],
+    }
+
+
+def cost_summary(compiled) -> dict:
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    out = {}
+    for key in ("flops", "bytes accessed", "transcendentals"):
+        if key in cost:
+            out[key.replace(" ", "_")] = float(cost[key])
+    return out
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if "argument_size_in_bytes" in out:
+        out["argument_mb_per_device"] = out["argument_size_in_bytes"] / 1e6
+    if "temp_size_in_bytes" in out:
+        out["temp_mb_per_device"] = out["temp_size_in_bytes"] / 1e6
+    return out

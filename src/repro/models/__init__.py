@@ -1,0 +1,1 @@
+"""Composable model definitions: decoder LMs and encoder-decoder models."""

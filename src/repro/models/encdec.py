@@ -1,0 +1,241 @@
+"""Encoder-decoder transformer (whisper-medium backbone).
+
+Per the assignment the audio frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (the output of whisper's two conv layers,
+1500 frames); the encoder projects them to d_model, adds learned
+positions, and runs bidirectional attention layers.  The decoder is a
+standard causal transformer with cross-attention to the encoder memory.
+
+Decode caches: per decoder layer a self-attention ``KvCache`` plus the
+cross-attention K/V computed once from the encoder memory at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import attention as attn_mod
+from repro.nn.attention import KvCache
+from repro.nn.module import layernorm, softcap, unembed
+from repro.nn.spec import ParamSpec, abstract_params, init_params, stacked
+from repro.models.lm import mlp, mlp_spec, _norm, _norm_spec
+
+
+class CrossKv(NamedTuple):
+    k: jax.Array  # (batch, frames, kv_heads, head_dim)
+    v: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# spec
+# ---------------------------------------------------------------------------
+
+
+def _enc_block_spec(cfg: ModelConfig):
+    return {
+        "norm1": _norm_spec(cfg),
+        "attn": attn_mod.attn_spec(cfg.d_model, cfg.attn),
+        "norm2": _norm_spec(cfg),
+        "mlp": mlp_spec(cfg),
+    }
+
+
+def _dec_block_spec(cfg: ModelConfig):
+    return {
+        "norm1": _norm_spec(cfg),
+        "self_attn": attn_mod.attn_spec(cfg.d_model, cfg.attn),
+        "norm_x": _norm_spec(cfg),
+        "cross_attn": attn_mod.attn_spec(cfg.d_model, cfg.attn),
+        "norm2": _norm_spec(cfg),
+        "mlp": mlp_spec(cfg),
+    }
+
+
+def model_spec(cfg: ModelConfig):
+    enc = cfg.encoder
+    assert enc is not None
+    return {
+        "encoder": {
+            "proj": {"w": ParamSpec((cfg.frontend_dim, cfg.d_model), axes=(None, "embed"))},
+            "pos": {"table": ParamSpec((enc.n_frames, cfg.d_model), axes=(None, "embed"),
+                                        init="normal", scale=0.02)},
+            "stage": stacked(_enc_block_spec(cfg), enc.n_layers),
+            "final_norm": _norm_spec(cfg),
+        },
+        "decoder": {
+            "embed": {"table": ParamSpec((cfg.vocab, cfg.d_model),
+                                          axes=("vocab", "embed"), init="normal", scale=0.02)},
+            "pos": {"table": ParamSpec((cfg.max_position, cfg.d_model), axes=(None, "embed"),
+                                        init="normal", scale=0.02)},
+            "stage": stacked(_dec_block_spec(cfg), cfg.n_layers),
+            "final_norm": _norm_spec(cfg),
+        },
+    }
+
+
+def init(cfg: ModelConfig, key):
+    return init_params(model_spec(cfg), key)
+
+
+def abstract(cfg: ModelConfig):
+    return abstract_params(model_spec(cfg))
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (batch, n_frames, frontend_dim) -> memory (b, n_frames, d)."""
+    p = params["encoder"]
+    x = (frames @ p["proj"]["w"]).astype(jnp.bfloat16)
+    x = x + p["pos"]["table"][: x.shape[1]][None].astype(x.dtype)
+
+    def enc_block(x, bp):
+        h = _norm(cfg, bp["norm1"], x)
+        x = x + attn_mod.attention(bp["attn"], h, cfg.attn, causal=False)
+        h = _norm(cfg, bp["norm2"], x)
+        x = x + mlp(bp["mlp"], h, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(enc_block, x, p["stage"])
+    return _norm(cfg, p["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_embed(params, cfg: ModelConfig, tokens, index=0):
+    p = params["decoder"]
+    x = p["embed"]["table"][tokens]
+    s = x.shape[1]
+    idx = jnp.atleast_1d(jnp.asarray(index))  # scalar or (batch,) ragged
+    pos_ids = idx[:, None] + jnp.arange(s)[None, :]  # (1|b, s)
+    x = x + p["pos"]["table"][pos_ids].astype(x.dtype)
+    return x
+
+
+def _dec_logits(params, cfg: ModelConfig, x):
+    out = unembed(params["decoder"]["embed"], x)
+    return softcap(out, cfg.final_softcap)
+
+
+def forward(params, cfg: ModelConfig, tokens, frames, *, remat=False):
+    """Training forward -> (logits, aux=0)."""
+    memory = encode(params, cfg, frames)
+    x = _dec_embed(params, cfg, tokens)
+
+    def dec_block(x, bp):
+        h = _norm(cfg, bp["norm1"], x)
+        x = x + attn_mod.attention(bp["self_attn"], h, cfg.attn, causal=True)
+        h = _norm(cfg, bp["norm_x"], x)
+        x = x + attn_mod.cross_attention(bp["cross_attn"], h, memory, cfg.attn)
+        h = _norm(cfg, bp["norm2"], x)
+        x = x + mlp(bp["mlp"], h, cfg)
+        return x, None
+
+    if remat:
+        dec_block = jax.checkpoint(dec_block)
+    x, _ = jax.lax.scan(dec_block, x, params["decoder"]["stage"])
+    x = _norm(cfg, params["decoder"]["final_norm"], x)
+    return _dec_logits(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, frames, *, remat=False):
+    logits, _ = forward(params, cfg, tokens, frames, remat=remat)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    n = cfg.n_layers
+    kv, hd = cfg.attn.n_kv_heads, cfg.attn.head_dim
+    frames = cfg.encoder.n_frames
+    self_c = attn_mod.cache_spec(batch, cache_len, cfg.attn)
+    return {
+        "self": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), self_c
+        ),
+        "cross": CrossKv(
+            k=jax.ShapeDtypeStruct((n, batch, frames, kv, hd), jnp.bfloat16),
+            v=jax.ShapeDtypeStruct((n, batch, frames, kv, hd), jnp.bfloat16),
+        ),
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens, frames,
+            cache_slots: int | None = None):
+    """Encode + decoder prefill -> (last logits, caches).
+
+    ``cache_slots`` sizes the self-attention ring for decode (>= prompt)."""
+    memory = encode(params, cfg, frames)
+    x = _dec_embed(params, cfg, tokens)
+    b, s, _ = x.shape
+    slots = max(cache_slots or s, s)
+
+    def dec_block(x, bp):
+        h = _norm(cfg, bp["norm1"], x)
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        _, k, v = attn_mod._qkv(bp["self_attn"], h, cfg.attn, positions)
+        pad = slots - s
+        k_p = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_p = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_p = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+        self_cache = KvCache(k=k_p, v=v_p, pos=pos_p.astype(jnp.int32))
+        x = x + attn_mod.attention(bp["self_attn"], h, cfg.attn, causal=True)
+        h = _norm(cfg, bp["norm_x"], x)
+        ck = jnp.einsum("btd,dnh->btnh", memory, bp["cross_attn"]["wk"])
+        cv = jnp.einsum("btd,dnh->btnh", memory, bp["cross_attn"]["wv"])
+        x = x + attn_mod.cross_attention(bp["cross_attn"], h, memory, cfg.attn)
+        h = _norm(cfg, bp["norm2"], x)
+        x = x + mlp(bp["mlp"], h, cfg)
+        return x, {"self": self_cache, "cross": CrossKv(k=ck, v=cv)}
+
+    x, caches = jax.lax.scan(dec_block, x, params["decoder"]["stage"])
+    x = _norm(cfg, params["decoder"]["final_norm"], x)
+    return _dec_logits(params, cfg, x[:, -1:, :]), caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, index):
+    """One decode step. caches: {"self": KvCache[n_layers], "cross": CrossKv}."""
+    x = _dec_embed(params, cfg, tokens, index=index)
+
+    def dec_block(x, xs):
+        bp, self_cache, cross = xs
+        h = _norm(cfg, bp["norm1"], x)
+        m, new_self = attn_mod.decode_attention(
+            bp["self_attn"], h, self_cache, cfg.attn, index=index
+        )
+        x = x + m
+        h = _norm(cfg, bp["norm_x"], x)
+        x = x + _cached_cross_attention(bp["cross_attn"], h, cross, cfg)
+        h = _norm(cfg, bp["norm2"], x)
+        x = x + mlp(bp["mlp"], h, cfg)
+        return x, new_self
+
+    x, new_self = jax.lax.scan(
+        dec_block, x, (params["decoder"]["stage"], caches["self"], caches["cross"])
+    )
+    x = _norm(cfg, params["decoder"]["final_norm"], x)
+    return _dec_logits(params, cfg, x), {"self": new_self, "cross": caches["cross"]}
+
+
+def _cached_cross_attention(params, x, cross: CrossKv, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    b, s = x.shape[0], x.shape[1]
+    t = cross.k.shape[1]
+    mask = jnp.ones((b, 1, 1, s, t), bool)
+    o = attn_mod._attend(q, cross.k, cross.v, mask, cfg.attn)
+    return attn_mod._proj_out(params, o, cfg.attn)

@@ -1,0 +1,427 @@
+"""Decoder-only LM covering the dense / MoE / SSM / hybrid / VLM families.
+
+A model is a sequence of *stages*, each a ``lax.scan`` over stacked
+super-block parameters (see ``repro.configs.base``).  Three execution
+modes share the same parameter tree:
+
+* ``forward``     — full-sequence training forward (no caches),
+* ``prefill``     — full-sequence forward that also builds decode caches,
+* ``decode_step`` — single-token (or few-token) step against caches.
+
+Caches mirror the stage structure: for every stage a pytree with leading
+dim = repeats, holding per-super-block entries (``KvCache`` for attention
+— ring-buffered for local windows — ``RglruState`` / ``SsdState`` for the
+recurrent mixers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockDef, ModelConfig
+from repro.nn import attention as attn_mod
+from repro.nn import kvquant
+from repro.nn import moe as moe_mod
+from repro.nn import rglru as rglru_mod
+from repro.nn import ssd as ssd_mod
+from repro.nn.module import (
+    act_fn,
+    dense,
+    dense_spec,
+    embed,
+    embed_spec,
+    layernorm,
+    layernorm_spec,
+    rmsnorm,
+    rmsnorm_spec,
+    softcap,
+    unembed,
+)
+from repro.nn.spec import ParamSpec, abstract_params, init_params, stacked
+
+
+# ---------------------------------------------------------------------------
+# spec construction
+# ---------------------------------------------------------------------------
+
+
+def _norm_spec(cfg: ModelConfig):
+    return rmsnorm_spec(cfg.d_model) if cfg.norm == "rmsnorm" else layernorm_spec(cfg.d_model)
+
+
+def _norm(cfg: ModelConfig, params, x):
+    return rmsnorm(params, x) if cfg.norm == "rmsnorm" else layernorm(params, x)
+
+
+def mlp_spec(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    spec = {
+        "w_in": ParamSpec((d, f), axes=("embed", "ff")),
+        "w_out": ParamSpec((f, d), axes=("ff", "embed")),
+    }
+    if cfg.glu:
+        spec["w_gate"] = ParamSpec((d, f), axes=("embed", "ff"))
+    return spec
+
+
+def mlp(params, x, cfg: ModelConfig):
+    a = act_fn(cfg.act)
+    h = x @ params["w_in"]
+    if cfg.glu:
+        h = a(x @ params["w_gate"]) * h
+    else:
+        h = a(h)
+    return h @ params["w_out"]
+
+
+def block_spec(cfg: ModelConfig, bd: BlockDef):
+    spec: dict[str, Any] = {"norm1": _norm_spec(cfg)}
+    if bd.mixer == "attn":
+        spec["attn"] = attn_mod.attn_spec(cfg.d_model, cfg.attn)
+    elif bd.mixer == "rglru":
+        spec["rglru"] = rglru_mod.rglru_spec(cfg.d_model, cfg.rglru)
+    elif bd.mixer == "ssd":
+        spec["ssd"] = ssd_mod.ssd_spec(cfg.d_model, cfg.ssm)
+    else:
+        raise ValueError(bd.mixer)
+    if cfg.post_block_norm:
+        spec["norm1_post"] = _norm_spec(cfg)
+    if bd.ff == "mlp":
+        spec["norm2"] = _norm_spec(cfg)
+        spec["mlp"] = mlp_spec(cfg)
+    elif bd.ff == "moe":
+        spec["norm2"] = _norm_spec(cfg)
+        spec["moe"] = moe_mod.moe_spec(cfg.d_model, cfg.moe, glu=cfg.glu)
+    if bd.ff != "none" and cfg.post_block_norm:
+        spec["norm2_post"] = _norm_spec(cfg)
+    return spec
+
+
+def model_spec(cfg: ModelConfig):
+    spec: dict[str, Any] = {"embed": embed_spec(cfg.vocab, cfg.d_model)}
+    if cfg.attn is not None and cfg.attn.learned_pos:
+        spec["pos"] = {
+            "table": ParamSpec((cfg.max_position, cfg.d_model), axes=(None, "embed"),
+                               init="normal", scale=0.02)
+        }
+    if cfg.frontend:
+        spec["frontend_proj"] = dense_spec(
+            cfg.frontend_dim, cfg.d_model, axes=(None, "embed")
+        )
+    for i, (pattern, repeats) in enumerate(cfg.stages):
+        sb = {f"b{j}": block_spec(cfg, bd) for j, bd in enumerate(pattern)}
+        spec[f"stage{i}"] = stacked(sb, repeats)
+    spec["final_norm"] = _norm_spec(cfg)
+    if not cfg.tie_embeddings:
+        spec["unembed"] = {
+            "w": ParamSpec((cfg.d_model, cfg.vocab), axes=("embed", "vocab"))
+        }
+    return spec
+
+
+def init(cfg: ModelConfig, key: jax.Array):
+    return init_params(model_spec(cfg), key)
+
+
+def abstract(cfg: ModelConfig):
+    return abstract_params(model_spec(cfg))
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _block_cache_spec(cfg: ModelConfig, bd: BlockDef, batch: int, cache_len: int, abstract_=True):
+    maker = _abstract_cache if abstract_ else _concrete_cache
+    return maker(cfg, bd, batch, cache_len)
+
+
+def _slots(bd: BlockDef, cache_len: int) -> int:
+    return min(bd.window, cache_len) if bd.window else cache_len
+
+
+def _abstract_cache(cfg, bd, batch, cache_len, kv_dtype="bf16"):
+    if bd.mixer == "attn":
+        if kv_dtype == "int8":
+            return kvquant.quant_cache_spec(batch, _slots(bd, cache_len), cfg.attn)
+        return attn_mod.cache_spec(batch, _slots(bd, cache_len), cfg.attn)
+    if bd.mixer == "rglru":
+        return rglru_mod.rglru_state_spec(batch, cfg.d_model, cfg.rglru)
+    return ssd_mod.ssd_state_spec(batch, cfg.d_model, cfg.ssm)
+
+
+def _concrete_cache(cfg, bd, batch, cache_len, kv_dtype="bf16"):
+    if bd.mixer == "attn":
+        if kv_dtype == "int8":
+            return kvquant.init_quant_cache(batch, _slots(bd, cache_len), cfg.attn)
+        return attn_mod.init_cache(batch, _slots(bd, cache_len), cfg.attn)
+    if bd.mixer == "rglru":
+        return rglru_mod.init_rglru_state(batch, cfg.d_model, cfg.rglru)
+    return ssd_mod.init_ssd_state(batch, cfg.d_model, cfg.ssm)
+
+
+def _stack_tree(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stack_spec_tree(trees):
+    def stk(*xs):
+        return jax.ShapeDtypeStruct((len(xs), *xs[0].shape), xs[0].dtype)
+
+    return jax.tree.map(stk, *trees, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int, kv_dtype: str = "bf16"):
+    """Abstract decode-cache tree (ShapeDtypeStructs, no allocation)."""
+    out = {}
+    for i, (pattern, repeats) in enumerate(cfg.stages):
+        sb = {
+            f"b{j}": _abstract_cache(cfg, bd, batch, cache_len, kv_dtype)
+            for j, bd in enumerate(pattern)
+        }
+        out[f"stage{i}"] = _stack_spec_tree([sb] * repeats)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, kv_dtype: str = "bf16"):
+    out = {}
+    for i, (pattern, repeats) in enumerate(cfg.stages):
+        sb = {
+            f"b{j}": _concrete_cache(cfg, bd, batch, cache_len, kv_dtype)
+            for j, bd in enumerate(pattern)
+        }
+        out[f"stage{i}"] = _stack_tree([sb] * repeats)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(params, bd: BlockDef, cfg: ModelConfig, x, *, mode: str,
+                 cache=None, index=None, cache_slots=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(cfg, params["norm1"], x)
+    new_cache = cache
+    if bd.mixer == "attn":
+        if mode == "decode":
+            decode_fn = (
+                kvquant.quant_decode_attention
+                if isinstance(cache, kvquant.QuantKvCache)
+                else attn_mod.decode_attention
+            )
+            m, new_cache = decode_fn(
+                params["attn"], h, cache, cfg.attn, index=index, window=bd.window
+            )
+        else:
+            m = attn_mod.attention(
+                params["attn"], h, cfg.attn, window=bd.window, causal=True
+            )
+            if mode == "prefill":
+                new_cache = _kv_from_full(params["attn"], h, cfg, bd, cache_slots)
+    elif bd.mixer == "rglru":
+        if mode == "decode":
+            m, new_cache = rglru_mod.rglru_step(params["rglru"], h, cache, cfg.rglru)
+        else:
+            m, st = rglru_mod.rglru(params["rglru"], h, cfg.rglru)
+            new_cache = st if mode == "prefill" else None
+    else:  # ssd
+        if mode == "decode":
+            m, new_cache = ssd_mod.ssd_step(params["ssd"], h, cache, cfg.ssm)
+        else:
+            m, st = ssd_mod.ssd(params["ssd"], h, cfg.ssm)
+            new_cache = st if mode == "prefill" else None
+    if cfg.post_block_norm:
+        m = _norm(cfg, params["norm1_post"], m)
+    x = x + m
+
+    if bd.ff != "none":
+        h = _norm(cfg, params["norm2"], x)
+        if bd.ff == "mlp":
+            f = mlp(params["mlp"], h, cfg)
+        else:
+            f, aux = moe_mod.moe(params["moe"], h, cfg.moe, act=cfg.act, glu=cfg.glu)
+        if cfg.post_block_norm:
+            f = _norm(cfg, params["norm2_post"], f)
+        x = x + f
+    return x, new_cache, aux
+
+
+def _kv_from_full(params, h, cfg: ModelConfig, bd: BlockDef, cache_slots=None):
+    """Build a decode cache from a prefill forward (positions 0..s-1).
+
+    ``cache_slots`` sizes the ring for the decode phase (>= s for full
+    attention that must keep every prefilled position visible)."""
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    _, k, v = attn_mod._qkv(params, h, cfg.attn, positions)
+    slots = _slots(bd, max(cache_slots or s, s))
+    if slots >= s:
+        pad = slots - s
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+    else:
+        # ring layout: slot = position % slots; keep the last ``slots``
+        idx = (jnp.arange(s - slots, s) // 1)  # absolute positions kept
+        ring = idx % slots
+        k_r = jnp.zeros((b, slots, *k.shape[2:]), k.dtype).at[:, ring].set(k[:, s - slots :])
+        v_r = jnp.zeros((b, slots, *v.shape[2:]), v.dtype).at[:, ring].set(v[:, s - slots :])
+        pos = jnp.full((b, slots), -1, jnp.int32).at[:, ring].set(
+            jnp.broadcast_to(idx[None, :], (b, slots))
+        )
+        k, v = k_r, v_r
+    return attn_mod.KvCache(k=k, v=v, pos=pos.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# stage execution (scan over stacked super-blocks)
+# ---------------------------------------------------------------------------
+
+
+def _run_stage(params_stage, pattern, cfg: ModelConfig, x, *, mode, caches=None,
+               index=None, remat=False, cache_slots=None):
+    def super_block(carry, xs):
+        x, aux = carry
+        p_sb, cache_sb = xs
+        new_caches = {}
+        for j, bd in enumerate(pattern):
+            c = cache_sb.get(f"b{j}") if cache_sb is not None else None
+            x, nc, a = _apply_block(
+                p_sb[f"b{j}"], bd, cfg, x, mode=mode, cache=c, index=index,
+                cache_slots=cache_slots,
+            )
+            if nc is not None:
+                new_caches[f"b{j}"] = nc
+            aux = aux + a
+        return (x, aux), (new_caches or None)
+
+    if remat:
+        super_block = jax.checkpoint(super_block)
+
+    xs = (params_stage, caches)
+    (x, aux), new_caches = jax.lax.scan(super_block, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux, new_caches
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, frontend_embeds=None):
+    x = embed(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = (x.astype(jnp.float32) * jnp.sqrt(float(cfg.d_model))).astype(x.dtype)
+    if frontend_embeds is not None:
+        fe = dense(params["frontend_proj"], frontend_embeds).astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    if cfg.attn is not None and cfg.attn.learned_pos:
+        s = x.shape[1]
+        x = x + params["pos"]["table"][:s][None].astype(x.dtype)
+    return x
+
+
+def _logits(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        out = unembed(params["embed"], x)
+    else:
+        out = x.astype(jnp.float32) @ params["unembed"]["w"].astype(jnp.float32)
+    return softcap(out, cfg.final_softcap)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, tokens, *, frontend_embeds=None, remat=False):
+    """Training forward: (batch, seq) tokens -> (batch, seq, vocab) logits."""
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, (pattern, _) in enumerate(cfg.stages):
+        x, aux, _ = _run_stage(
+            params[f"stage{i}"], pattern, cfg, x, mode="train", remat=remat
+        )
+        aux_total = aux_total + aux
+    x = _norm(cfg, params["final_norm"], x)
+    return _logits(params, cfg, x), aux_total
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, *, frontend_embeds=None,
+            remat=False, loss_chunk: int | None = 512, aux_weight: float = 0.01):
+    """Mean next-token cross entropy (+ MoE aux loss).
+
+    The softmax/CE is computed in sequence chunks so that the fp32 logits
+    tensor never materialises at full (batch, seq, vocab) size — with 256k
+    vocabs this is the difference between ~250 MB and ~30 GB per device.
+    """
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, (pattern, _) in enumerate(cfg.stages):
+        x, aux, _ = _run_stage(
+            params[f"stage{i}"], pattern, cfg, x, mode="train", remat=remat
+        )
+        aux_total = aux_total + aux
+    x = _norm(cfg, params["final_norm"], x)
+
+    b, s, d = x.shape
+    if loss_chunk is None or s <= loss_chunk:
+        ce = _ce(params, cfg, x, labels)
+    else:
+        n = s // loss_chunk
+        xc = x.reshape(b, n, loss_chunk, d).transpose(1, 0, 2, 3)
+        lc = labels.reshape(b, n, loss_chunk).transpose(1, 0, 2)
+
+        # checkpoint: recompute the (chunk, vocab) logits in backward
+        # instead of saving them (256k-vocab logits dominate temps otherwise)
+        @jax.checkpoint
+        def chunk_ce(carry, xs):
+            xi, li = xs
+            return carry + _ce(params, cfg, xi, li) * (1.0 / n), None
+
+        ce, _ = jax.lax.scan(chunk_ce, jnp.zeros((), jnp.float32), (xc, lc))
+    return ce + aux_weight * aux_total
+
+
+def _ce(params, cfg: ModelConfig, x, labels):
+    logits = _logits(params, cfg, x)  # fp32
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, frontend_embeds=None,
+            cache_slots: int | None = None):
+    """Prefill: forward over the prompt -> (last_logits, caches).
+
+    ``cache_slots`` sizes the decode ring buffers (defaults to the prompt
+    length; pass the serving cache length to decode past the prompt with
+    full attention)."""
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    caches = {}
+    for i, (pattern, _) in enumerate(cfg.stages):
+        x, _, stage_cache = _run_stage(
+            params[f"stage{i}"], pattern, cfg, x, mode="prefill",
+            cache_slots=cache_slots,
+        )
+        caches[f"stage{i}"] = stage_cache
+    x = _norm(cfg, params["final_norm"], x)
+    return _logits(params, cfg, x[:, -1:, :]), caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, index):
+    """One decode step.  tokens: (batch, 1); index: scalar absolute position.
+
+    Returns (logits (batch, 1, vocab), updated caches)."""
+    x = _embed_inputs(params, cfg, tokens)
+    new_caches = {}
+    for i, (pattern, _) in enumerate(cfg.stages):
+        x, _, stage_cache = _run_stage(
+            params[f"stage{i}"], pattern, cfg, x,
+            mode="decode", caches=caches[f"stage{i}"], index=index,
+        )
+        new_caches[f"stage{i}"] = stage_cache
+    x = _norm(cfg, params["final_norm"], x)
+    return _logits(params, cfg, x), new_caches

@@ -1,0 +1,1 @@
+"""Lightweight functional module system on param-spec pytrees (no flax)."""

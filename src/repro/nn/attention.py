@@ -1,0 +1,202 @@
+"""Grouped-query attention with RoPE, local windows, softcaps, KV caches.
+
+Supports the attention variants of every assigned architecture:
+* GQA / MQA / MHA via ``n_kv_heads``              (all archs)
+* QKV biases                                      (qwen1.5)
+* attention-logit softcapping                     (gemma-2)
+* sliding local windows, incl. ring-buffer caches (gemma-2, recurrentgemma)
+* learned absolute positions / no RoPE            (whisper)
+* bidirectional (encoder) attention               (whisper encoder)
+
+The KV cache is position-explicit: alongside K/V we store the absolute
+position of every cache slot (-1 = empty) and build masks by comparing
+positions, which makes full caches and ring-buffer (local-window) caches
+the same code path.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig
+from repro.nn.memeff import memeff_attention
+from repro.nn.module import rope, softcap
+from repro.nn.spec import ParamSpec
+
+NEG_INF = -2.0**30  # large-negative in fp32; avoids bf16 overflow surprises
+
+
+def attn_spec(d_model: int, cfg: AttnConfig):
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec = {
+        "wq": ParamSpec((d_model, h, hd), axes=("embed", "heads", None)),
+        "wk": ParamSpec((d_model, kv, hd), axes=("embed", "kv_heads", None)),
+        "wv": ParamSpec((d_model, kv, hd), axes=("embed", "kv_heads", None)),
+        "wo": ParamSpec((h, hd, d_model), axes=("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamSpec((h, hd), axes=("heads", None), init="zeros")
+        spec["bk"] = ParamSpec((kv, hd), axes=("kv_heads", None), init="zeros")
+        spec["bv"] = ParamSpec((kv, hd), axes=("kv_heads", None), init="zeros")
+    if cfg.out_bias:
+        spec["bo"] = ParamSpec((d_model,), axes=("embed",), init="zeros")
+    return spec
+
+
+class KvCache(NamedTuple):
+    """Position-explicit KV cache (ring buffer when len < max positions)."""
+
+    k: jax.Array  # (batch, slots, kv_heads, head_dim)
+    v: jax.Array  # (batch, slots, kv_heads, head_dim)
+    pos: jax.Array  # (batch, slots) int32, -1 = empty
+
+
+def cache_spec(batch: int, slots: int, cfg: AttnConfig, dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return KvCache(
+        k=jax.ShapeDtypeStruct((batch, slots, kv, hd), dtype),
+        v=jax.ShapeDtypeStruct((batch, slots, kv, hd), dtype),
+        pos=jax.ShapeDtypeStruct((batch, slots), jnp.int32),
+    )
+
+
+def init_cache(batch: int, slots: int, cfg: AttnConfig, dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return KvCache(
+        k=jnp.zeros((batch, slots, kv, hd), dtype),
+        v=jnp.zeros((batch, slots, kv, hd), dtype),
+        pos=jnp.full((batch, slots), -1, jnp.int32),
+    )
+
+
+def _qkv(params, x, cfg: AttnConfig, positions):
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if cfg.rope:
+        q = rope(q, positions, theta=cfg.rope_theta)
+        k = rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg: AttnConfig):
+    """(b, s, h, hd) x (b, t, kv, hd) -> (b, kv, g, s, t) fp32 logits."""
+    b, s, h, hd = q.shape
+    kv = cfg.n_kv_heads
+    g = h // kv
+    q = q.reshape(b, s, kv, g, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(hd)
+    return softcap(logits, cfg.logit_softcap)
+
+
+def _attend(q, k, v, mask, cfg: AttnConfig):
+    logits = _gqa_scores(q, k, cfg)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    b, s = q.shape[0], q.shape[1]
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, s, cfg.n_heads, cfg.head_dim)
+
+
+def _proj_out(params, o, cfg: AttnConfig):
+    y = jnp.einsum("bsnh,nhd->bsd", o, params["wo"])
+    if cfg.out_bias:
+        y = y + params["bo"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# full-sequence attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    params,
+    x,
+    cfg: AttnConfig,
+    *,
+    positions=None,
+    window: int | None = None,
+    causal: bool = True,
+):
+    """Self-attention over a full sequence (blockwise online-softmax —
+    O(qc*kc) temps, banded KV for local windows).  x: (b, seq, d_model)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(params, x, cfg, positions)
+    pos = jnp.broadcast_to(positions, (b, s)).astype(jnp.int32)
+    o = memeff_attention(
+        q, k, v, pos, pos,
+        causal=causal, window=window, softcap=cfg.logit_softcap,
+    )
+    return _proj_out(params, o, cfg)
+
+
+def cross_attention(params, x, kv_input, cfg: AttnConfig):
+    """Encoder-decoder cross attention (no RoPE on either side)."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("btd,dnh->btnh", kv_input, params["wk"])
+    v = jnp.einsum("btd,dnh->btnh", kv_input, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    b, s = x.shape[0], x.shape[1]
+    t = kv_input.shape[1]
+    qp = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(t)[None], (b, t)).astype(jnp.int32)
+    o = memeff_attention(
+        q, k, v, qp, kp, causal=False, softcap=cfg.logit_softcap,
+    )
+    return _proj_out(params, o, cfg)
+
+
+# ---------------------------------------------------------------------------
+# cached decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    params,
+    x,
+    cache: KvCache,
+    cfg: AttnConfig,
+    *,
+    index: jax.Array,
+    window: int | None = None,
+):
+    """One (or a few) decode steps against a KV cache.
+
+    x: (batch, s_new, d_model); ``index`` is the absolute position of the
+    first new token — a scalar, or a (batch,) vector for ragged batches
+    (continuous batching: every slot at its own position).  The cache is a
+    ring buffer over ``slots``; for local windows ``slots`` >= window.
+    """
+    b, s_new, _ = x.shape
+    slots = cache.k.shape[1]
+    index = jnp.asarray(index)
+    if index.ndim == 0:
+        index = index[None]
+    positions = index[:, None] + jnp.arange(s_new)[None, :]  # (1|b, s_new)
+    positions = jnp.broadcast_to(positions, (b, s_new))
+    q, k_new, v_new = _qkv(params, x, cfg, positions)
+
+    # ring-buffer write: slot = position % slots
+    write_slots = (positions % slots).astype(jnp.int32)  # (b, s_new)
+    bidx = jnp.arange(b)[:, None]
+    k = cache.k.at[bidx, write_slots].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[bidx, write_slots].set(v_new.astype(cache.v.dtype))
+    pos = cache.pos.at[bidx, write_slots].set(positions)
+
+    qp = positions[:, None, None, :, None]  # (b,1,1,s_new,1)
+    kp = pos[:, None, None, None, :]  # (b,1,1,1,slots)
+    mask = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        mask &= qp - kp < window
+    o = _attend(q, k, v, mask, cfg)
+    return _proj_out(params, o, cfg), KvCache(k=k, v=v, pos=pos)

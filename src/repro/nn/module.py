@@ -1,0 +1,128 @@
+"""Basic layers: dense, norms, embeddings, rotary embeddings.
+
+Functional style: ``*_spec()`` returns the parameter SpecTree, the apply
+function consumes the materialised (or abstract) params dict.  Compute
+dtype is bf16 by default; norms and softmax run in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+
+def dense_spec(d_in: int, d_out: int, *, axes=("embed", "ff"), bias=False, scale=1.0):
+    spec = {"w": ParamSpec((d_in, d_out), axes=axes, scale=scale)}
+    if bias:
+        spec["b"] = ParamSpec((d_out,), axes=(axes[1],), init="zeros")
+    return spec
+
+
+def dense(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms (fp32 compute, bf16 output)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int):
+    # gemma-style (1 + scale) parameterisation, initialised to zeros
+    return {"scale": ParamSpec((d,), dtype=jnp.float32, axes=("embed",), init="zeros")}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(dtype)
+
+
+def layernorm_spec(d: int):
+    return {
+        "scale": ParamSpec((d,), dtype=jnp.float32, axes=("embed",), init="ones"),
+        "bias": ParamSpec((d,), dtype=jnp.float32, axes=("embed",), init="zeros"),
+    }
+
+
+def layernorm(params, x, *, eps: float = 1e-5):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(vocab: int, d: int):
+    return {"table": ParamSpec((vocab, d), axes=("vocab", "embed"), init="normal", scale=0.02)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]  # gather; GSPMD turns this into a sharded lookup
+
+
+def unembed(params, x):
+    """Tied softmax head: logits in fp32."""
+    return x.astype(jnp.float32) @ params["table"].T.astype(jnp.float32)
+
+
+def positional_embed_spec(max_len: int, d: int):
+    return {"pos": ParamSpec((max_len, d), axes=(None, "embed"), init="normal", scale=0.02)}
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0) -> jax.Array:
+    """Apply rotary embeddings.  x: (..., seq, heads, head_dim),
+    positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,219 @@
+"""Mamba-2 block via the SSD (state-space duality) chunked algorithm.
+
+Per head (head dim P, state dim N), with per-head scalar decay::
+
+    a_t = exp(A * dt_t),  A = -exp(A_log)          (A_log learned, per head)
+    H_t = a_t * H_{t-1} + (dt_t * x_t) (x) B_t     (outer product, P x N)
+    y_t = H_t . C_t + D * x_t
+
+The chunked SSD decomposition (chunk length Q) computes, per chunk,
+an intra-chunk quadratic term ``M = (C B^T) * segsum-decay * causal`` and
+an inter-chunk O(1)-state recurrence — linear in sequence length, which
+is what qualifies mamba2 for the ``long_500k`` shape.  Decode keeps a
+(P x N) state per head: O(1) per token.
+
+Block layout (mamba2): in_proj -> [z | x | B | C | dt]; causal depthwise
+conv over [x|B|C]; SSD; gated RMSNorm (y * silu(z)); out_proj.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SsmConfig
+from repro.nn.module import rmsnorm_spec
+from repro.nn.spec import ParamSpec
+
+
+def _dims(d_model: int, cfg: SsmConfig):
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    conv_dim = d_inner + 2 * cfg.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def ssd_spec(d_model: int, cfg: SsmConfig):
+    d_inner, n_heads, conv_dim = _dims(d_model, cfg)
+    proj_out = 2 * d_inner + 2 * cfg.d_state + n_heads  # z, x, B, C, dt
+    return {
+        "in_proj": ParamSpec((d_model, proj_out), axes=("embed", "rnn")),
+        "conv_w": ParamSpec((cfg.conv_width, conv_dim), axes=(None, "rnn")),
+        "conv_b": ParamSpec((conv_dim,), axes=("rnn",), init="zeros"),
+        "a_log": ParamSpec((n_heads,), dtype=jnp.float32, axes=("rnn",), init="normal", scale=0.5),
+        "dt_bias": ParamSpec((n_heads,), dtype=jnp.float32, axes=("rnn",), init="zeros"),
+        "d_skip": ParamSpec((n_heads,), dtype=jnp.float32, axes=("rnn",), init="ones"),
+        "norm": rmsnorm_spec(d_inner),
+        "out_proj": ParamSpec((d_inner, d_model), axes=("rnn", "embed")),
+    }
+
+
+class SsdState(NamedTuple):
+    h: jax.Array  # (batch, n_heads, head_dim, d_state) fp32
+    conv: jax.Array  # (batch, conv_width - 1, conv_dim)
+
+
+def ssd_state_spec(batch: int, d_model: int, cfg: SsmConfig, dtype=jnp.bfloat16):
+    d_inner, n_heads, conv_dim = _dims(d_model, cfg)
+    return SsdState(
+        h=jax.ShapeDtypeStruct((batch, n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        conv=jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, conv_dim), dtype),
+    )
+
+
+def init_ssd_state(batch: int, d_model: int, cfg: SsmConfig, dtype=jnp.bfloat16):
+    d_inner, n_heads, conv_dim = _dims(d_model, cfg)
+    return SsdState(
+        h=jnp.zeros((batch, n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    )
+
+
+def _split_proj(params, u, d_model, cfg: SsmConfig):
+    d_inner, n_heads, _ = _dims(d_model, cfg)
+    proj = u @ params["in_proj"]
+    z, xs, b, c, dt = jnp.split(
+        proj,
+        [d_inner, 2 * d_inner, 2 * d_inner + cfg.d_state, 2 * d_inner + 2 * cfg.d_state],
+        axis=-1,
+    )
+    return z, xs, b, c, dt
+
+
+def _conv(params, xbc, prefix, return_padded: bool = False):
+    w, bias = params["conv_w"], params["conv_b"]
+    width = w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([prefix, xbc], axis=1)
+    y = sum(xp[:, i : i + xbc.shape[1], :] * w[i] for i in range(width))
+    tail = xp if return_padded else xp[:, -(width - 1) :, :]
+    return jax.nn.silu(y + bias), tail
+
+
+def _gated_norm(params, y, z, eps=1e-6):
+    yf = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * (1.0 + params["norm"]["scale"])).astype(y.dtype)
+
+
+def ssd(params, u, cfg: SsmConfig, *, state: SsdState | None = None):
+    """Full-sequence mamba2 block.  u: (b, s, d_model).
+
+    Sequences that don't divide the chunk length are padded internally;
+    padded steps get dt = 0 (identity decay, zero input), so outputs and
+    the carried state are exactly those of the unpadded sequence."""
+    bsz, s_real, d_model = u.shape
+    d_inner, n_heads, _ = _dims(d_model, cfg)
+    P, N, Q = cfg.head_dim, cfg.d_state, cfg.chunk
+    pad = (-s_real) % Q
+    s = s_real + pad
+    nc = s // Q
+
+    z, xs, b, c, dt = _split_proj(params, u, d_model, cfg)
+    if pad:
+        xs, b, c, dt = (
+            jnp.pad(t, ((0, 0), (0, pad), (0, 0))) for t in (xs, b, c, dt)
+        )
+    width = cfg.conv_width
+    xbc, xp = _conv(
+        params,
+        jnp.concatenate([xs, b, c], axis=-1),
+        state.conv if state is not None else None,
+        return_padded=True,
+    )
+    # conv tail for decode continuation = last (width-1) *real* inputs
+    conv_tail = jax.lax.dynamic_slice_in_dim(xp, s_real, width - 1, axis=1)
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    # heads
+    x_h = xs.reshape(bsz, s, n_heads, P).astype(jnp.float32)
+    b_h = b.astype(jnp.float32)  # (b, s, N) single group, broadcast over heads
+    c_h = c.astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b, s, H)
+    if pad:  # padded steps: no decay, no input -> state passes through
+        valid = (jnp.arange(s) < s_real)[None, :, None]
+        dt = dt * valid
+    a_log = -jnp.exp(params["a_log"])  # (H,) negative
+    log_a = dt * a_log  # (b, s, H) per-step log decay
+
+    # --- chunked SSD ---------------------------------------------------------
+    xq = (dt[..., None] * x_h).reshape(bsz, nc, Q, n_heads, P)
+    bq = b_h.reshape(bsz, nc, Q, N)
+    cq = c_h.reshape(bsz, nc, Q, N)
+    lq = log_a.reshape(bsz, nc, Q, n_heads)
+    lcum = jnp.cumsum(lq, axis=2)  # within-chunk cumulative log decay
+    ltot = lcum[:, :, -1, :]  # (b, nc, H) full-chunk decay
+
+    # intra-chunk: M[i,j] = (C_i . B_j) * exp(l_i - l_j) for j <= i
+    scores = jnp.einsum("bkin,bkjn->bkij", cq, bq)  # (b, nc, Q, Q)
+    seg = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]  # (b,nc,i,j,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask BEFORE the exp: for j > i seg is positive and exp overflows —
+    # masking after would leave inf on the dead branch and NaN the grads
+    decay = jnp.exp(jnp.where(causal, seg, -1e30))
+    y_intra = jnp.einsum("bkij,bkijh,bkjhp->bkihp", scores, decay, xq)
+
+    # chunk summaries: S_k = sum_j exp(ltot - l_j) x_j (x) B_j   (b,nc,H,P,N)
+    wj = jnp.exp(ltot[:, :, None, :] - lcum)  # (b, nc, Q, H)
+    s_chunk = jnp.einsum("bkjh,bkjhp,bkjn->bkhpn", wj, xq, bq)
+
+    # inter-chunk recurrence over k: H_k = exp(ltot_k) H_{k-1} + S_k
+    h0 = (
+        state.h
+        if state is not None
+        else jnp.zeros((bsz, n_heads, P, N), jnp.float32)
+    )
+
+    def step(h, inp):
+        s_k, lt = inp
+        h_new = jnp.exp(lt)[:, :, None, None] * h + s_k
+        return h_new, h  # emit the *incoming* state for chunk k
+
+    h_last, h_in = jax.lax.scan(
+        step,
+        h0,
+        (s_chunk.transpose(1, 0, 2, 3, 4), ltot.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (b, nc, H, P, N)
+
+    # inter-chunk contribution: y_i += exp(lcum_i) C_i . H_in
+    y_inter = jnp.einsum(
+        "bkih,bkin,bkhpn->bkihp", jnp.exp(lcum), cq, h_in
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, s, n_heads, P)
+    y = y + params["d_skip"][None, None, :, None] * x_h
+    y = y.reshape(bsz, s, d_inner).astype(u.dtype)
+    if pad:
+        y = y[:, :s_real]  # z (below) is unpadded
+
+    y = _gated_norm(params, y, z)
+    out = y @ params["out_proj"]
+    return out, SsdState(h=h_last, conv=conv_tail)
+
+
+def ssd_step(params, u, state: SsdState, cfg: SsmConfig):
+    """Single-token decode.  u: (b, 1, d_model)."""
+    bsz, _, d_model = u.shape
+    d_inner, n_heads, _ = _dims(d_model, cfg)
+    P, N = cfg.head_dim, cfg.d_state
+
+    z, xs, b, c, dt = _split_proj(params, u, d_model, cfg)
+    xbc, conv_tail = _conv(params, jnp.concatenate([xs, b, c], axis=-1), state.conv)
+    xs, b, c = jnp.split(xbc[:, 0], [d_inner, d_inner + N], axis=-1)
+
+    x_h = xs.reshape(bsz, n_heads, P).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (b,H)
+    a = jnp.exp(dtv * -jnp.exp(params["a_log"]))  # (b, H)
+    bf = b.astype(jnp.float32)  # (b, N)
+    cf = c.astype(jnp.float32)
+
+    h = a[:, :, None, None] * state.h + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, x_h, bf
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, cf) + params["d_skip"][None, :, None] * x_h
+    y = y.reshape(bsz, 1, d_inner).astype(u.dtype)
+    y = _gated_norm(params, y, z)
+    return y @ params["out_proj"], SsdState(h=h, conv=conv_tail)

@@ -1,0 +1,6 @@
+"""Pytest session config.
+
+IMPORTANT: do NOT set --xla_force_host_platform_device_count here — the
+dry-run owns that trick (512 devices), and smoke tests must see 1 device.
+Multi-device assertions run in subprocesses (see test_multidev.py).
+"""

@@ -1,0 +1,205 @@
+"""Property tests for the mask-form multi-address encoding (paper II-A)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.encoding import (
+    ADDR_MASK,
+    ADDR_WIDTH,
+    AddressDecoder,
+    AddrRule,
+    Ife,
+    Mfe,
+    cluster_window,
+    decode_bulk,
+    ife_to_mfe,
+    mcast_request_for_clusters,
+    mfe_for_address_set,
+    mfe_to_ife,
+)
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+aligned_intervals = st.integers(min_value=0, max_value=20).flatmap(
+    lambda log_size: st.integers(
+        min_value=0, max_value=(1 << (ADDR_WIDTH - log_size)) - 1
+    ).map(lambda k: Ife(start=k << log_size, end=(k + 1) << log_size))
+)
+
+small_masks = st.integers(min_value=0, max_value=ADDR_MASK).map(
+    # keep popcount <= 10 so the address set stays enumerable
+    lambda m: m & 0x3FF
+)
+
+
+# ---------------------------------------------------------------------------
+# IFE <-> MFE
+# ---------------------------------------------------------------------------
+
+
+@given(aligned_intervals)
+def test_ife_mfe_roundtrip(ife):
+    mfe = ife_to_mfe(ife)
+    assert mfe.size == ife.size
+    back = mfe_to_ife(mfe)
+    assert (back.start, back.end) == (ife.start, ife.end)
+
+
+@given(aligned_intervals)
+@settings(max_examples=200)
+def test_mfe_represents_exactly_the_interval(ife):
+    mfe = ife_to_mfe(ife)
+    if ife.size > 1 << 12:
+        # membership check only, on the boundaries
+        assert mfe.contains(ife.start)
+        assert mfe.contains(ife.end - 1)
+        assert not mfe.contains(ife.end)
+        if ife.start:
+            assert not mfe.contains(ife.start - 1)
+    else:
+        assert list(mfe.addresses()) == list(range(ife.start, ife.end))
+
+
+def test_unaligned_interval_rejected():
+    with pytest.raises(ValueError):
+        Ife(start=0x100, end=0x100 + 0x180)  # not a power of two
+    with pytest.raises(ValueError):
+        Ife(start=0x40, end=0xC0)  # power of two but misaligned
+
+
+@given(st.integers(min_value=0, max_value=ADDR_MASK), small_masks)
+def test_membership_matches_enumeration(addr, mask):
+    mfe = Mfe(addr, mask)
+    addrs = set(mfe.addresses())
+    assert len(addrs) == mfe.size
+    for a in list(addrs)[:16]:
+        assert mfe.contains(a)
+    # a flipped non-masked bit is never a member
+    for bit in range(ADDR_WIDTH):
+        if not (mask >> bit) & 1:
+            assert (addr ^ (1 << bit)) not in addrs
+            break
+
+
+# ---------------------------------------------------------------------------
+# figure-1 examples: contiguous and strided sets
+# ---------------------------------------------------------------------------
+
+
+def test_fig1_contiguous_set():
+    # masking the two LSBs of addr forks into 4 consecutive addresses
+    mfe = Mfe(addr=0b1000, mask=0b0011)
+    assert list(mfe.addresses()) == [0b1000, 0b1001, 0b1010, 0b1011]
+
+
+def test_fig1_strided_set():
+    # masking non-adjacent bits gives a strided set
+    mfe = Mfe(addr=0b0000, mask=0b1010)
+    assert list(mfe.addresses()) == [0b0000, 0b0010, 0b1000, 0b1010]
+
+
+# ---------------------------------------------------------------------------
+# decoder: aw_select equals brute-force set intersection
+# ---------------------------------------------------------------------------
+
+
+def _occamy_rules(n=8):
+    return [
+        AddrRule(idx=i, start=cluster_window(i).start, end=cluster_window(i).end)
+        for i in range(n)
+    ]
+
+
+@given(
+    st.integers(min_value=0, max_value=7),  # base cluster
+    st.integers(min_value=0, max_value=0x3FFFF),  # offset within window
+    st.integers(min_value=0, max_value=7).map(lambda m: m << 18),  # window mask bits
+)
+def test_decoder_matches_bruteforce(cid, offset, win_mask):
+    rules = _occamy_rules()
+    dec = AddressDecoder(rules)
+    w = cluster_window(cid)
+    addr, mask = w.start + offset, win_mask
+    res = dec.decode(addr, mask)
+    expect = set()
+    m = Mfe(addr, mask)
+    for r in rules:
+        if any(r.contains(a) for a in m.addresses(limit=4096)):
+            expect.add(r.idx)
+    assert set(res.subsets) == expect
+    assert res.select == sum(1 << i for i in expect)
+    # per-slave subsets partition the request's address set (within rules)
+    got = set()
+    for sub in res.subsets.values():
+        sub_addrs = set(sub.addresses(limit=1 << 20))
+        assert sub_addrs <= set(m.addresses(limit=1 << 20))
+        assert not (got & sub_addrs)
+        got |= sub_addrs
+
+
+@given(
+    st.lists(st.integers(min_value=0, max_value=ADDR_MASK), min_size=1, max_size=16),
+    st.lists(small_masks, min_size=1, max_size=16),
+)
+def test_bulk_decoder_matches_scalar(addrs, masks):
+    n = min(len(addrs), len(masks))
+    addrs, masks = addrs[:n], masks[:n]
+    rules = _occamy_rules()
+    dec = AddressDecoder(rules)
+    rule_addrs = np.array([r.start for r in rules])
+    rule_masks = np.array([cluster_window(0).size - 1] * len(rules))
+    hits = decode_bulk(
+        np.array(addrs), np.array(masks), rule_addrs, rule_masks
+    )
+    for i, (a, m) in enumerate(zip(addrs, masks)):
+        scalar = dec.decode(a, m)
+        for j, r in enumerate(rules):
+            assert hits[i, j] == bool(scalar.select >> r.idx & 1)
+
+
+# ---------------------------------------------------------------------------
+# cluster-set requests (the Occamy use case)
+# ---------------------------------------------------------------------------
+
+
+@given(st.sets(st.integers(min_value=0, max_value=31), min_size=1, max_size=32))
+def test_cluster_multicast_requests(ids):
+    req = mcast_request_for_clusters(ids, offset=0x1000)
+    rules = [
+        AddrRule(idx=i, start=cluster_window(i).start, end=cluster_window(i).end)
+        for i in range(32)
+    ]
+    dec = AddressDecoder(rules)
+    if req is None:
+        # not mask-expressible: must not be a full 2^n aligned expansion
+        m = mfe_for_address_set(ids)
+        assert m is None
+        return
+    res = dec.decode(req.addr, req.mask)
+    assert set(res.subsets) == set(ids)
+    # every per-cluster subset resolves to exactly the offset address
+    for cid, sub in res.subsets.items():
+        assert sub.mask == 0
+        assert sub.addr == cluster_window(cid).start + 0x1000
+
+
+def test_power_of_two_strided_cluster_sets():
+    # even clusters 0,2,4,...,30 — strided, mask-expressible
+    req = mcast_request_for_clusters(range(0, 32, 2))
+    assert req is not None
+    # {0,1,2}: size 3, not expressible
+    assert mcast_request_for_clusters([0, 1, 2]) is None
+
+
+def test_encoding_scales_logarithmically():
+    """The paper's scalability claim: mask width == address width,
+    independent of destination-set size."""
+    req_2 = mcast_request_for_clusters([0, 1])
+    req_32 = mcast_request_for_clusters(range(32))
+    assert req_2.mask.bit_length() <= ADDR_WIDTH
+    assert req_32.mask.bit_length() <= ADDR_WIDTH
+    # 32 destinations encoded in exactly 5 masked window bits
+    assert bin(req_32.mask).count("1") == 5

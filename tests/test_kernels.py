@@ -1,0 +1,164 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All kernels run in interpret mode on CPU (the container has no TPU); the
+pallas_call + BlockSpec structure is the TPU target.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.matmul.matmul import hbm_traffic_model
+from repro.kernels.matmul.ops import mcast_matmul, unicast_matmul
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.rglru.ops import lru_scan
+from repro.kernels.rglru.ref import rglru_scan_ref
+from repro.kernels.ssd.ops import ssd_core
+from repro.kernels.ssd.ref import ssd_scan_ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dt):
+    return dict(rtol=3e-2, atol=3e-2) if dt == jnp.bfloat16 else dict(rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# matmul (the paper's kernel)
+# ---------------------------------------------------------------------------
+
+MM_SHAPES = [(256, 256, 256), (128, 384, 256), (256, 512, 128), (512, 128, 384)]
+
+
+@pytest.mark.parametrize("shape", MM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_mcast_schedule(shape, dtype):
+    m, k, n = shape
+    a = jax.random.normal(KEY, (m, k), dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), dtype)
+    out = mcast_matmul(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(matmul_ref(a, b), np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("shape", MM_SHAPES[:2])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_unicast_schedule(shape, dtype):
+    m, k, n = shape
+    a = jax.random.normal(KEY, (m, k), dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), dtype)
+    out = unicast_matmul(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(matmul_ref(a, b), np.float32), **_tol(dtype)
+    )
+
+
+def test_matmul_block_shape_sweep():
+    a = jax.random.normal(KEY, (256, 256), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (256, 256), jnp.float32)
+    ref = matmul_ref(a, b)
+    for bn, bk in [(64, 64), (128, 256), (256, 128)]:
+        out = mcast_matmul(a, b, bn=bn, bk=bk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_matmul_traffic_model_matches_paper_story():
+    """bm=8 = one Occamy cluster row block; 256/8 = 32 'clusters'."""
+    t = hbm_traffic_model(256, 256, 256, bm=8, bn=16, bk=256, dtype_bytes=8)
+    # B traffic ratio is exactly 32 (one fetch vs one per row block)
+    assert t["unicast_bytes"] > t["mcast_bytes"]
+    b_uni = 256 * 256 * 8 * 32
+    b_mc = 256 * 256 * 8
+    assert t["unicast_bytes"] - t["mcast_bytes"] == b_uni - b_mc
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    ((2, 4, 4, 256, 64), dict(causal=True)),
+    ((1, 8, 2, 256, 128), dict(causal=True, window=64)),
+    ((2, 4, 2, 128, 64), dict(causal=True, softcap=50.0)),
+    ((1, 2, 2, 256, 64), dict(causal=False)),
+    ((1, 4, 1, 128, 64), dict(causal=True)),  # MQA
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES, ids=[str(i) for i in range(len(FA_CASES))])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(case, dtype):
+    (b, h, kvh, s, d), kw = case
+    q = jax.random.normal(KEY, (b, h, s, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, kvh, s, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, kvh, s, d), dtype)
+    out = flash(q, k, v, bq=64, bk=64, **kw)
+    ref = attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# rglru scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(2, 512, 256), (1, 256, 512), (3, 128, 128)])
+def test_rglru_kernel(shape):
+    b, s, d = shape
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (b, s, d))) * 0.2 + 0.8
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, d))
+    out = lru_scan(a.astype(jnp.float32), x.astype(jnp.float32), bs=128, bd=128)
+    ref = rglru_scan_ref(a.astype(jnp.float32), x.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "shape", [(1, 2, 256, 64, 32, 64), (2, 3, 128, 32, 64, 32), (1, 4, 512, 64, 128, 128)]
+)
+def test_ssd_kernel(shape):
+    b, h, s, p, n, ch = shape
+    xdt = jax.random.normal(KEY, (b, h, s, p), jnp.float32) * 0.5
+    bm = jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, n), jnp.float32) * 0.5
+    cm = jax.random.normal(jax.random.fold_in(KEY, 4), (b, s, n), jnp.float32) * 0.5
+    log_a = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 5), (b, h, s)))
+    out = ssd_core(xdt, bm, cm, log_a, chunk=ch)
+    ref = ssd_scan_ref(xdt, bm, cm, log_a)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=5e-4, atol=5e-4)
+
+
+def test_ssd_nn_chunked_matches_naive():
+    """The model's chunked SSD (nn/ssd.py) against the sequential oracle."""
+    from repro.configs.base import SsmConfig
+    from repro.nn import ssd as nn_ssd
+    from repro.nn.spec import init_params
+
+    cfg = SsmConfig(d_state=16, head_dim=8, expand=2, conv_width=4, chunk=8)
+    d_model = 32
+    spec = nn_ssd.ssd_spec(d_model, cfg)
+    params = init_params(spec, KEY)
+    u = jax.random.normal(KEY, (2, 32, d_model), jnp.float32) * 0.5
+
+    full, st_full = nn_ssd.ssd(params, u, cfg)
+    # step-by-step decode must match the full pass
+    st = nn_ssd.init_ssd_state(2, d_model, cfg, dtype=jnp.float32)
+    outs = []
+    for t in range(u.shape[1]):
+        y, st = nn_ssd.ssd_step(params, u[:, t : t + 1], st, cfg)
+        outs.append(y)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(seq, np.float32), np.asarray(full, np.float32), rtol=2e-2, atol=2e-2
+    )
+    np.testing.assert_allclose(
+        np.asarray(st.h), np.asarray(st_full.h), rtol=2e-2, atol=2e-2
+    )

@@ -1,0 +1,67 @@
+"""int8 KV-cache tests: quantisation quality + decode equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.nn.kvquant import (
+    cache_bytes,
+    dequantize_kv,
+    init_quant_cache,
+    quantize_kv,
+)
+
+KEY = jax.random.PRNGKey(9)
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(KEY, (2, 16, 4, 32), jnp.bfloat16) * 3.0
+    q, s = quantize_kv(x)
+    deq = dequantize_kv(q, s, jnp.float32)
+    err = np.abs(np.asarray(deq) - np.asarray(x, np.float32))
+    scale = np.asarray(s, np.float32)
+    # rounding (0.5*scale) + the bf16 rounding of the scale itself
+    # (up to 127 * 2^-8 * scale ~ 0.5*scale at the far end of the range)
+    assert (err <= scale * 1.6 + 1e-6).all()
+
+
+def test_int8_cache_half_the_bytes():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    bf16 = lm.init_cache(cfg, 2, 64)
+    int8 = lm.init_cache(cfg, 2, 64, kv_dtype="int8")
+    # int8 k/v + bf16 scales: ~= 0.5x + per-slot scale overhead
+    ratio = cache_bytes(int8) / cache_bytes(bf16)
+    assert ratio < 0.6, ratio
+
+
+def test_int8_decode_matches_bf16_decode():
+    """Greedy decode with int8 cache tracks the bf16-cache decode."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = lm.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
+
+    caches16 = lm.init_cache(cfg, 2, 16)
+    caches8 = lm.init_cache(cfg, 2, 16, kv_dtype="int8")
+    outs16, outs8 = [], []
+    for t in range(12):
+        lg16, caches16 = lm.decode_step(params, cfg, caches16, toks[:, t : t + 1], jnp.int32(t))
+        lg8, caches8 = lm.decode_step(params, cfg, caches8, toks[:, t : t + 1], jnp.int32(t))
+        outs16.append(lg16)
+        outs8.append(lg8)
+    a = np.asarray(jnp.concatenate(outs16, 1), np.float32)
+    b = np.asarray(jnp.concatenate(outs8, 1), np.float32)
+    np.testing.assert_allclose(a, b, rtol=0.25, atol=0.25)  # int8 noise bound
+    # greedy agreement on decisive positions
+    top2 = np.sort(a, axis=-1)[..., -2:]
+    decisive = (top2[..., 1] - top2[..., 0]) > 0.25
+    np.testing.assert_array_equal(a.argmax(-1)[decisive], b.argmax(-1)[decisive])
+
+
+def test_int8_cache_spec_shapes():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    spec = lm.cache_spec(cfg, 4, 32, kv_dtype="int8")
+    leaves = jax.tree.leaves(spec)
+    names = {np.dtype(l.dtype).name for l in leaves}
+    assert {"int8", "bfloat16", "int32"} <= names

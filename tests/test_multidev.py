@@ -1,0 +1,26 @@
+"""Multi-device behaviours, run in a subprocess with 16 fake devices.
+
+The main pytest session must stay single-device (the dry-run owns the
+512-device XLA_FLAGS trick), so all sharded-execution assertions run in
+one subprocess here: multicast collective hierarchy, mesh-independent
+loss, elastic checkpoint restore, FSDP weight-gather collectives.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_multidevice_scenarios():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "tests", "_multidev_main.py")],
+        env=env, capture_output=True, text=True, timeout=1200,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "ALL_MULTIDEV_OK" in proc.stdout

@@ -1,0 +1,87 @@
+"""Optimizer + gradient-compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.dist.compression import compress_grads, init_error_state
+from repro.optim import adamw
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, warmup_steps=1, total_steps=200, weight_decay=0.0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params, cfg)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for i in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.update(g, state, params, jnp.int32(i), cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=0.05)
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(adamw.schedule(jnp.int32(0), cfg)) == 0.0
+    assert float(adamw.schedule(jnp.int32(10), cfg)) == pytest.approx(1.0)
+    assert float(adamw.schedule(jnp.int32(100), cfg)) == pytest.approx(0.0, abs=1e-6)
+    mid = float(adamw.schedule(jnp.int32(55), cfg))
+    assert 0.0 < mid < 1.0
+
+
+def test_grad_clipping_bounds_update_norm():
+    cfg = adamw.AdamWConfig(lr=1e-2, grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init(params, cfg)
+    huge = {"w": jnp.full(4, 1e6)}
+    _, _, metrics = adamw.update(huge, state, params, jnp.int32(5), cfg)
+    assert float(metrics["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_bf16_moments_halve_state_bytes():
+    cfg32 = adamw.AdamWConfig()
+    cfg16 = adamw.AdamWConfig(moment_dtype=jnp.bfloat16)
+    p = {"w": jnp.zeros((128, 128))}
+    s32 = adamw.init(p, cfg32)
+    s16 = adamw.init(p, cfg16)
+    assert s16.m["w"].dtype == jnp.bfloat16
+    assert s16.m["w"].nbytes * 2 == s32.m["w"].nbytes
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=1, max_value=400), st.floats(min_value=0.01, max_value=100))
+@settings(max_examples=20, deadline=None)
+def test_quantization_error_bounded(n, scale):
+    g = {"w": jnp.linspace(-scale, scale, n)}
+    e = init_error_state(g)
+    gq, e2 = compress_grads(g, e)
+    # int8 block quantisation: |error| <= scale/127 per element (half step
+    # rounding) within each block
+    err = np.abs(np.asarray(gq["w"]) - np.asarray(g["w"]))
+    assert err.max() <= scale / 127 + 1e-6
+
+
+def test_error_feedback_preserves_signal():
+    """A constant gradient stream: EF compensation keeps the running sum
+    of compressed grads near the true sum (no systematic bias)."""
+    g = {"w": jnp.full((64,), 0.003)}
+    e = init_error_state(g)
+    total = np.zeros(64)
+    for _ in range(50):
+        gq, e = compress_grads(g, e)
+        total += np.asarray(gq["w"])
+    np.testing.assert_allclose(total, 50 * 0.003 * np.ones(64), rtol=0.05)
+
+
+def test_compression_roundtrip_shape_dtype():
+    g = {"a": jnp.ones((7, 13), jnp.bfloat16), "b": jnp.ones((257,), jnp.float32)}
+    e = init_error_state(g)
+    gq, _ = compress_grads(g, e)
+    assert gq["a"].shape == (7, 13) and gq["a"].dtype == jnp.bfloat16
+    assert gq["b"].shape == (257,) and gq["b"].dtype == jnp.float32

@@ -1,0 +1,135 @@
+"""Reproduction of the paper's reported numbers (figs. 3a-3c).
+
+These are the *validation gates* for the faithful reproduction: each test
+asserts the model lands within tolerance of a number printed in the paper.
+"""
+import math
+
+import pytest
+
+from repro.core.area import xbar_area
+from repro.core.noc import OccamyNoc
+from repro.core.occamy import OccamySystem
+
+
+@pytest.fixture(scope="module")
+def noc():
+    return OccamyNoc()
+
+
+@pytest.fixture(scope="module")
+def system():
+    return OccamySystem()
+
+
+# ---------------------------------------------------------------------------
+# fig. 3a — area / timing
+# ---------------------------------------------------------------------------
+
+
+def test_area_overheads_match_paper():
+    a8 = xbar_area(8)
+    a16 = xbar_area(16)
+    assert a8.overhead_kge == pytest.approx(13.1, rel=0.02)
+    assert a8.overhead_frac == pytest.approx(0.09, abs=0.005)
+    assert a16.overhead_kge == pytest.approx(45.4, rel=0.02)
+    assert a16.overhead_frac == pytest.approx(0.12, abs=0.005)
+
+
+def test_timing_degradation_only_at_16():
+    assert xbar_area(8).freq_ghz_mcast == 1.0
+    assert xbar_area(16).freq_ghz_mcast == pytest.approx(0.94)  # -6%
+
+
+def test_area_scales_quadratically():
+    a4, a8, a16 = (xbar_area(n).base_kge for n in (4, 8, 16))
+    assert a16 / a8 > 2.0 and a8 / a4 > 2.0  # super-linear growth
+
+
+# ---------------------------------------------------------------------------
+# fig. 3b — microbenchmark
+# ---------------------------------------------------------------------------
+
+
+def test_speedup_32clusters_32kib(noc):
+    assert noc.speedup(32768, 32) == pytest.approx(16.2, rel=0.02)
+
+
+def test_speedup_32clusters_smallest(noc):
+    assert noc.speedup(4096, 32) == pytest.approx(13.5, rel=0.02)
+
+
+def test_speedup_range_on_32_clusters(noc):
+    sps = [noc.speedup(s, 32) for s in (4096, 8192, 16384, 32768)]
+    assert sorted(sps) == sps  # grows with transfer size
+    assert 13.0 <= sps[0] and sps[-1] <= 16.5
+
+
+def test_speedup_grows_with_cluster_count(noc):
+    sps = [noc.speedup(32768, n) for n in (2, 4, 8, 16, 32)]
+    assert sorted(sps) == sps
+
+
+def test_amdahl_parallel_fraction_97pct(noc):
+    sp = noc.speedup(32768, 32)
+    p = noc.amdahl_parallel_fraction(sp, 32)
+    assert p == pytest.approx(0.97, abs=0.005)
+
+
+def test_hw_over_sw_geomean_5_6x(noc):
+    ratios = [
+        noc.one_to_all(s, 32, "sw_tree").cycles
+        / noc.one_to_all(s, 32, "hw_mcast").cycles
+        for s in (4096, 8192, 16384, 32768)
+    ]
+    geomean = math.prod(ratios) ** (1 / len(ratios))
+    assert geomean == pytest.approx(5.6, rel=0.03)
+
+
+def test_sw_tree_beats_unicast_beyond_one_group(noc):
+    for n in (8, 16, 32):
+        assert noc.speedup(32768, n, "sw_tree") > 1.0
+
+
+# ---------------------------------------------------------------------------
+# fig. 3c — matmul kernel study
+# ---------------------------------------------------------------------------
+
+
+def test_largest_llc_tile_is_256(system):
+    assert system.largest_llc_tile() == 256
+
+
+def test_baseline_oi_and_gflops(system):
+    r = system.matmul(mode="baseline")
+    assert r.oi == pytest.approx(1.9, abs=0.05)
+    assert r.gflops == pytest.approx(114.4, rel=0.01)
+    assert r.frac_of_attainable == pytest.approx(0.92, abs=0.01)
+
+
+def test_sw_mcast_oi_ratio_3_7x(system):
+    base = system.matmul(mode="baseline")
+    sw = system.matmul(mode="sw_mcast")
+    assert sw.oi / base.oi == pytest.approx(3.7, abs=0.05)
+    assert sw.gflops / base.gflops == pytest.approx(2.6, abs=0.05)
+
+
+def test_hw_mcast_oi_ratio_16_5x(system):
+    base = system.matmul(mode="baseline")
+    hw = system.matmul(mode="hw_mcast")
+    assert hw.oi / base.oi == pytest.approx(16.5, abs=0.1)
+    assert hw.gflops == pytest.approx(391.4, rel=0.01)
+    assert hw.gflops / base.gflops == pytest.approx(3.4, abs=0.07)
+
+
+def test_peak_is_512_gflops(system):
+    # 32 clusters x 8 cores x 2 flop/cycle @ 1 GHz
+    assert system.cfg.peak_gflops == 512
+
+
+def test_multicast_moves_kernel_towards_compute_bound(system):
+    base = system.matmul(mode="baseline")
+    hw = system.matmul(mode="hw_mcast")
+    # baseline memory bound (OI-bound < peak); hw multicast compute bound
+    assert base.attainable_gflops < base.peak_gflops
+    assert hw.attainable_gflops == hw.peak_gflops

@@ -1,0 +1,119 @@
+"""Shape-cell applicability + sharding-rule unit tests (no device mesh)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, applicable, cells, input_specs
+
+
+def test_40_assigned_cells_accounted_for():
+    """10 archs x 4 shapes = 40 cells: every cell is either applicable or
+    carries a documented skip reason."""
+    total, ok, skipped = 0, 0, 0
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            total += 1
+            is_ok, reason = applicable(cfg, shape)
+            if is_ok:
+                ok += 1
+            else:
+                skipped += 1
+                assert reason, f"{arch} x {shape} skipped without reason"
+    assert total == 40
+    assert ok == 32  # 30 + 2 long_500k (ssm/hybrid)
+    assert skipped == 8  # long_500k on the 8 full-attention archs
+
+
+def test_long_context_only_for_subquadratic():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        is_ok, _ = applicable(cfg, "long_500k")
+        assert is_ok == cfg.supports_long_context
+    assert sorted(
+        a for a in ARCHS if get_config(a).supports_long_context
+    ) == ["mamba2-780m", "recurrentgemma-2b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_are_abstract(arch):
+    cfg = get_config(arch)
+    for shape in cells(cfg):
+        specs = input_specs(cfg, shape)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), (arch, shape)
+
+
+def test_train_shapes_match_assignment():
+    s = SHAPES["train_4k"]
+    assert (s.seq_len, s.global_batch) == (4096, 256)
+    s = SHAPES["prefill_32k"]
+    assert (s.seq_len, s.global_batch) == (32768, 32)
+    s = SHAPES["decode_32k"]
+    assert (s.seq_len, s.global_batch) == (32768, 128)
+    s = SHAPES["long_500k"]
+    assert (s.seq_len, s.global_batch) == (524288, 1)
+
+
+# ---------------------------------------------------------------------------
+# sharding-rule repairs (pure PartitionSpec logic, no devices needed)
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    shape = {"data": 16, "model": 16}
+    axis_names = ("data", "model")
+
+
+def test_whisper_vocab_not_sharded():
+    from repro.dist.sharding import param_pspecs
+    from repro.models import encdec
+
+    cfg = get_config("whisper-medium")
+    ps = param_pspecs(cfg, encdec.model_spec(cfg), _FakeMesh())
+    # 51865 % 16 != 0 -> the embed table's vocab dim must replicate
+    assert ps["decoder"]["embed"]["table"] == P(None, None)
+
+
+def test_llama4_heads_replicated_kv_too():
+    from repro.dist.sharding import param_pspecs
+    from repro.models import lm
+
+    cfg = get_config("llama4-maverick-400b-a17b")
+    ps = param_pspecs(cfg, lm.model_spec(cfg), _FakeMesh())
+    wq = ps["stage0"]["b0"]["attn"]["wq"]
+    assert wq == P(None, None, None, None)  # 40 heads % 16 != 0
+    w_in = ps["stage0"]["b1"]["moe"]["w_in"]
+    assert w_in == P(None, "model", None, None)  # experts sharded once
+
+
+def test_moe_no_duplicate_mesh_axes():
+    from repro.dist.sharding import param_pspecs
+    from repro.models import lm
+
+    cfg = get_config("moonshot-v1-16b-a3b")
+    ps = param_pspecs(cfg, lm.model_spec(cfg), _FakeMesh())
+    for spec in jax.tree.leaves(ps, is_leaf=lambda x: isinstance(x, P)):
+        axes = [a for entry in spec if entry for a in
+                (entry if isinstance(entry, tuple) else (entry,))]
+        assert len(axes) == len(set(axes)), spec
+
+
+def test_small_ssm_runs_without_tp():
+    from repro.dist.sharding import logical_rules
+
+    cfg = get_config("mamba2-780m")
+    rules = logical_rules(cfg, _FakeMesh())
+    assert rules["rnn"] is None  # §Perf S1
+    big = get_config("recurrentgemma-2b")
+    assert logical_rules(big, _FakeMesh())["rnn"] == "model"
+
+
+def test_small_ssm_batch_spreads_over_model_axis():
+    from repro.dist.sharding import batch_axes
+
+    cfg = get_config("mamba2-780m")
+    assert batch_axes(_FakeMesh(), 256, cfg) == ("data", "model")  # §Perf S2
+    dense = get_config("deepseek-7b")
+    assert batch_axes(_FakeMesh(), 256, dense) == ("data",)

@@ -1,0 +1,217 @@
+"""Protocol tests for the multicast crossbar simulator (paper II-A)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.encoding import AddrRule, cluster_window, mcast_request_for_clusters
+from repro.core.xbar import DeadlockError, McastXbar, Resp, WriteTxn, join_resps
+
+
+def rules(n=4):
+    return [
+        AddrRule(idx=i, start=cluster_window(i).start, end=cluster_window(i).end)
+        for i in range(n)
+    ]
+
+
+def mk_mcast(master, ids, n_beats=4, **kw):
+    req = mcast_request_for_clusters(ids)
+    assert req is not None
+    return WriteTxn(master=master, addr=req.addr, mask=req.mask, n_beats=n_beats, **kw)
+
+
+def mk_uni(master, cid, n_beats=4, **kw):
+    return WriteTxn(master=master, addr=cluster_window(cid).start, n_beats=n_beats, **kw)
+
+
+# ---------------------------------------------------------------------------
+# basic datapath
+# ---------------------------------------------------------------------------
+
+
+def test_unicast_completes_with_okay():
+    xb = McastXbar(2, rules())
+    t = xb.submit(mk_uni(0, 1))
+    xb.run()
+    assert t.resp is Resp.OKAY and t.done_cycle is not None
+
+
+def test_mcast_forks_to_all_targets():
+    xb = McastXbar(2, rules())
+    t = xb.submit(mk_mcast(0, [0, 1, 2, 3]))
+    xb.run()
+    assert t.decode.fanout == 4
+    # every slave observed exactly one W stream from master 0
+    for s in range(4):
+        assert len(xb.slave_w_order[s]) == 1
+
+
+def test_b_join_waits_for_all_slaves():
+    # with resp_latency differing per completion order the join must not
+    # fire early: completion cycle >= last beat + resp_latency
+    xb = McastXbar(1, rules(), resp_latency=5)
+    t = xb.submit(mk_mcast(0, [0, 1, 2, 3], n_beats=3))
+    xb.run()
+    assert t.done_cycle >= t.issue_cycle + 3 + 5
+
+
+def test_resp_id_from_first_addressed_slave():
+    xb = McastXbar(1, rules())
+    t = xb.submit(mk_mcast(0, [2, 3]))
+    xb.run()
+    assert t.resp_id == 2  # priority encoder: lowest addressed slave
+
+
+def test_error_or_reduction():
+    xb = McastXbar(1, rules(), err_slaves=frozenset({3}))
+    t = xb.submit(mk_mcast(0, [0, 1, 2, 3]))
+    xb.run()
+    assert t.resp is Resp.SLVERR
+    ok = xb.submit(mk_mcast(0, [0, 1]))
+    xb.run()
+    assert ok.resp is Resp.OKAY
+
+
+def test_join_resps_semantics():
+    assert join_resps([Resp.OKAY, Resp.OKAY]) is Resp.OKAY
+    assert join_resps([Resp.OKAY, Resp.SLVERR]) is Resp.SLVERR
+    assert join_resps([Resp.DECERR, Resp.OKAY]) is Resp.SLVERR
+
+
+def test_exclusive_multicast_disallowed():
+    xb = McastXbar(1, rules())
+    with pytest.raises(ValueError):
+        xb.submit(mk_mcast(0, [0, 1], exclusive=True))
+
+
+# ---------------------------------------------------------------------------
+# ordering rules
+# ---------------------------------------------------------------------------
+
+
+def test_mcast_waits_for_outstanding_unicasts():
+    xb = McastXbar(1, rules(), resp_latency=10)
+    u = xb.submit(mk_uni(0, 0, n_beats=2))
+    m = xb.submit(mk_mcast(0, [2, 3], n_beats=2))
+    xb.run()
+    assert m.issue_cycle > u.done_cycle - 1  # mcast AW held until unicast B
+
+
+def test_unicast_waits_for_outstanding_mcast():
+    xb = McastXbar(1, rules(), resp_latency=10)
+    m = xb.submit(mk_mcast(0, [2, 3], n_beats=2))
+    u = xb.submit(mk_uni(0, 1, n_beats=2))
+    xb.run()
+    assert u.issue_cycle > m.done_cycle - 1
+
+
+def test_concurrent_mcasts_same_port_set_allowed():
+    xb = McastXbar(1, rules(), max_mcast_outstanding=2, resp_latency=20)
+    a = xb.submit(mk_mcast(0, [0, 1], n_beats=2))
+    b = xb.submit(mk_mcast(0, [0, 1], n_beats=2))
+    xb.run()
+    # second AW issued before first B returned (overlap), same port set
+    assert b.issue_cycle < a.done_cycle
+
+
+def test_concurrent_mcasts_different_port_set_blocked():
+    xb = McastXbar(1, rules(), max_mcast_outstanding=2, resp_latency=20)
+    a = xb.submit(mk_mcast(0, [0, 1], n_beats=2))
+    b = xb.submit(mk_mcast(0, [2, 3], n_beats=2))
+    xb.run()
+    assert b.issue_cycle >= a.done_cycle  # different port set: serialised
+
+
+def test_max_outstanding_mcast_respected():
+    xb = McastXbar(1, rules(), max_mcast_outstanding=1, resp_latency=20)
+    a = xb.submit(mk_mcast(0, [0, 1], n_beats=2))
+    b = xb.submit(mk_mcast(0, [0, 1], n_beats=2))
+    xb.run()
+    assert b.issue_cycle >= a.done_cycle
+
+
+def test_same_id_different_slave_blocked():
+    xb = McastXbar(1, rules(), resp_latency=30)
+    a = xb.submit(mk_uni(0, 0, n_beats=2, axi_id=7))
+    b = xb.submit(mk_uni(0, 1, n_beats=2, axi_id=7))
+    c = xb.submit(mk_uni(0, 0, n_beats=2, axi_id=3))
+    xb.run()
+    # same ID to a different slave must wait for the B response
+    assert b.issue_cycle >= a.done_cycle
+
+
+def test_same_id_same_slave_not_blocked():
+    xb = McastXbar(1, rules(), resp_latency=30)
+    a = xb.submit(mk_uni(0, 0, n_beats=2, axi_id=7))
+    b = xb.submit(mk_uni(0, 0, n_beats=2, axi_id=7))
+    xb.run()
+    assert b.issue_cycle < a.done_cycle
+
+
+def test_w_order_consistent_across_slaves():
+    """AXI rule behind fig. 2e: slaves that receive streams from several
+    multicasts must observe them in the same relative order."""
+    xb = McastXbar(2, rules(), resp_latency=3)
+    xb.submit(mk_mcast(0, [0, 1], n_beats=4))
+    xb.submit(mk_mcast(1, [0, 1], n_beats=4))
+    xb.run()
+    assert xb.slave_w_order[0] == xb.slave_w_order[1]
+
+
+# ---------------------------------------------------------------------------
+# deadlock: fig. 2e
+# ---------------------------------------------------------------------------
+
+
+def test_fig2e_deadlock_without_commit_protocol():
+    xb = McastXbar(2, rules(), commit_protocol=False)
+    xb.submit(mk_mcast(0, [0, 1], n_beats=8))
+    xb.submit(mk_mcast(1, [0, 1], n_beats=8))
+    with pytest.raises(DeadlockError):
+        xb.run(watchdog=300)
+
+
+def test_fig2e_resolved_with_commit_protocol():
+    xb = McastXbar(2, rules(), commit_protocol=True)
+    a = xb.submit(mk_mcast(0, [0, 1], n_beats=8))
+    b = xb.submit(mk_mcast(1, [0, 1], n_beats=8))
+    xb.run()
+    assert a.resp is Resp.OKAY and b.resp is Resp.OKAY
+
+
+# ---------------------------------------------------------------------------
+# property: no deadlock, all complete, for random mixes (commit protocol on)
+# ---------------------------------------------------------------------------
+
+_sets = [(0,), (1,), (2,), (3,), (0, 1), (2, 3), (0, 1, 2, 3), (0, 2), (1, 3)]
+
+
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(min_value=0, max_value=3),  # master
+            st.sampled_from(_sets),  # target cluster set
+            st.integers(min_value=1, max_value=6),  # beats
+            st.integers(min_value=0, max_value=3),  # axi id
+        ),
+        min_size=1,
+        max_size=24,
+    )
+)
+@settings(max_examples=60, deadline=None)
+def test_random_mix_always_completes(txns):
+    xb = McastXbar(4, rules(), max_mcast_outstanding=2, resp_latency=2)
+    submitted = [
+        xb.submit(mk_mcast(m, ids, n_beats=b, axi_id=i) if len(ids) > 1
+                  else mk_uni(m, ids[0], n_beats=b, axi_id=i))
+        for m, ids, b, i in txns
+    ]
+    cycles = xb.run(max_cycles=200_000)
+    assert len(xb.completed) == len(submitted)
+    for t in submitted:
+        assert t.resp is Resp.OKAY
+    # per-slave W streams never interleave (ownership is exclusive):
+    # every slave saw exactly the txns that addressed it
+    for s in range(4):
+        expect = sum(1 for t in submitted if s in t.targets)
+        assert len(xb.slave_w_order[s]) == expect
