@@ -1,5 +1,9 @@
 """Pallas kernel sanity timings (interpret mode on CPU — correctness
-path; TPU wall-clock comes from the Mosaic build on real hardware)."""
+path; TPU wall-clock comes from the Mosaic build on real hardware).
+
+Block sizes are left to the shared autotuner (``repro.kernels.autotune``)
+— the derived column records the config it picked.
+"""
 import time
 
 import jax
@@ -15,6 +19,8 @@ def _time(fn, *args, reps=3):
 
 
 def run() -> list[str]:
+    from repro.kernels import autotune
+
     k = jax.random.PRNGKey(0)
     rows = []
 
@@ -22,20 +28,37 @@ def run() -> list[str]:
 
     q = jax.random.normal(k, (1, 4, 256, 64), jnp.float32)
     kv = jax.random.normal(k, (1, 2, 256, 64), jnp.float32)
-    rows.append(f"kernel_flash_attn,{_time(lambda a: flash(a, kv, kv, bq=64, bk=64), q):.1f},GQA 4q/2kv s256 d64")
+    cfg = autotune.best_config("flash_attention", (1, 4, 256, 256, 64), jnp.float32)
+    rows.append(
+        f"kernel_flash_attn,{_time(lambda a: flash(a, kv, kv), q):.1f},"
+        f"GQA 4q/2kv s256 d64 cfg={cfg}"
+    )
 
     from repro.kernels.rglru.ops import lru_scan
 
     a = jax.nn.sigmoid(jax.random.normal(k, (1, 256, 256)))
     x = jax.random.normal(k, (1, 256, 256))
-    rows.append(f"kernel_rglru,{_time(lambda u: lru_scan(u, x, bs=128, bd=128), a):.1f},scan s256 d256")
+    cfg = autotune.best_config("rglru", (1, 256, 256), jnp.float32)
+    rows.append(f"kernel_rglru,{_time(lambda u: lru_scan(u, x), a):.1f},scan s256 d256 cfg={cfg}")
 
     from repro.kernels.ssd.ops import ssd_core
 
     xdt = jax.random.normal(k, (1, 2, 256, 64), jnp.float32)
     bm = jax.random.normal(k, (1, 256, 64), jnp.float32)
     log_a = -jax.nn.softplus(jax.random.normal(k, (1, 2, 256)))
+    cfg = autotune.best_config("ssd", (1, 2, 256, 64, 64), jnp.float32)
     rows.append(
-        f"kernel_ssd,{_time(lambda u: ssd_core(u, bm, bm, log_a, chunk=64), xdt):.1f},chunked s256 P64 N64"
+        f"kernel_ssd,{_time(lambda u: ssd_core(u, bm, bm, log_a), xdt):.1f},"
+        f"chunked s256 P64 N64 cfg={cfg}"
+    )
+
+    from repro.kernels.matmul.ops import tiled_matmul
+
+    aa = jax.random.normal(k, (1024, 256), jnp.float32)
+    bb = jax.random.normal(k, (256, 256), jnp.float32)
+    cfg = autotune.best_config("matmul", (1024, 256, 256), jnp.float32, schedule="tiled")
+    rows.append(
+        f"kernel_matmul_tiled,{_time(lambda u: tiled_matmul(u, bb), aa):.1f},"
+        f"supertile M1024 K256 N256 cfg={cfg}"
     )
     return rows

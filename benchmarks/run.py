@@ -1,7 +1,9 @@
 """Benchmark orchestrator — one bench per paper table/figure + the TPU
-adaptations.  Prints ``name,us_per_call,derived`` CSV lines.
+adaptations.  Prints ``name,us_per_call,derived`` CSV lines and writes
+the same rows as machine-readable JSON (name -> {us, derived}) so the
+perf trajectory can be tracked PR-over-PR.
 
-  PYTHONPATH=src python -m benchmarks.run [--skip-subprocess]
+  PYTHONPATH=src python -m benchmarks.run [--skip-subprocess] [--json PATH]
 
 Benches:
   fig3a_*      XBAR area/timing model          (paper fig. 3a)
@@ -12,10 +14,32 @@ Benches:
 """
 from __future__ import annotations
 
+import json
 import sys
+
+DEFAULT_JSON = "BENCH_kernels.json"
+
+
+def rows_to_json(rows: list[str]) -> dict[str, dict]:
+    out: dict[str, dict] = {}
+    for r in rows:
+        name, us, derived = r.split(",", 2)
+        out[name] = {"us": float(us), "derived": derived}
+    return out
+
+
+def _json_path() -> str:
+    if "--json" not in sys.argv:
+        return DEFAULT_JSON
+    i = sys.argv.index("--json")
+    if i + 1 >= len(sys.argv) or sys.argv[i + 1].startswith("--"):
+        raise SystemExit("error: --json requires a path argument")
+    return sys.argv[i + 1]
 
 
 def main() -> None:
+    json_path = _json_path()  # validate flags before the long run
+
     from benchmarks import bench_area, bench_matmul_roofline, bench_microbench
 
     rows: list[str] = []
@@ -35,6 +59,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(r)
+
+    with open(json_path, "w") as f:
+        json.dump(rows_to_json(rows), f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,46 @@
+"""JAX version compatibility (this container ships 0.4.x).
+
+The codebase targets the newer mesh-context API; on older JAX we map it
+onto the equivalents that exist there:
+
+* ``jax.set_mesh(mesh)``   -> the Mesh object itself (it is a context
+                              manager on every version we support);
+* ``jax.make_mesh(..., axis_types=...)`` -> the kwarg is dropped when
+                              unsupported (Auto is the old default);
+* ``jax.sharding.AxisType`` -> a stub enum for call sites that only
+                              pass ``AxisType.Auto`` through.
+
+``install()`` is idempotent and runs on ``import repro`` (see
+``repro/__init__.py``), so every entry point gets it for free.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+
+class _AxisTypeStub(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None):
+    """jax.make_mesh that tolerates old versions without axis_types."""
+    if axis_types is not None and "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def install() -> None:
+    if not hasattr(jax, "set_mesh"):
+        # Mesh is a context manager; entering it is what set_mesh's
+        # context-manager form does on new JAX.
+        jax.set_mesh = lambda mesh: mesh
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisTypeStub
+
+
+AxisType = getattr(jax.sharding, "AxisType", _AxisTypeStub)

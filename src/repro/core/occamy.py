@@ -19,6 +19,14 @@ Cycle counts come from a per-iteration double-buffered pipeline model:
 ``tile_time = max(compute, LLC service, distribution path) + sync`` where
 ``sync`` is the multicast/unicast ordering drain + commit/join overhead
 (see ``repro.core.timing.TimingModel.mcast_sync_overhead``).
+
+The Pallas kernel layer mirrors this hierarchy on TPU: flat ``mcast``
+(one B fetch, all row blocks resident) plays ``hw_mcast``; the
+supertile ``tiled`` schedule (``matmul_mcast_tiled``, one B fetch per
+``gm``-row group) plays the two-stage ``sw_mcast`` hierarchy; and
+``unicast`` plays ``baseline``.  ``kernel_schedule_analogy`` spells the
+mapping out and ``repro.kernels.matmul.matmul.hbm_traffic_model`` gives
+the analytic byte counts for all three.
 """
 from __future__ import annotations
 
@@ -149,6 +157,27 @@ class OccamySystem:
             peak_gflops=cfg.peak_gflops,
             llc_bw_gbps=bw * t.freq_ghz,
         )
+
+    # ------------------------------------------------------------------
+    def kernel_schedule_analogy(self, gm: int = 1024, bm: int = 8) -> dict[str, dict]:
+        """Map the hardware B-distribution hierarchy onto the TPU kernel
+        schedules (see ``repro.kernels.matmul.matmul``).
+
+        The reuse degree is the number of consumers one LLC/HBM fetch of
+        a B tile serves: every cluster (``hw_mcast`` / kernel ``mcast``),
+        one group of clusters (``sw_mcast`` / kernel ``tiled`` with a
+        ``gm``-row supertile = gm/bm row blocks), or a single cluster
+        (``baseline`` / kernel ``unicast``).
+        """
+        nc = self.cfg.n_clusters
+        return {
+            "hw_mcast": {"kernel": "mcast", "b_reuse": nc,
+                         "note": "one fetch serves every cluster/row block"},
+            "sw_mcast": {"kernel": "tiled", "b_reuse": gm // bm,
+                         "note": f"one fetch per group/supertile of {gm // bm} row blocks"},
+            "baseline": {"kernel": "unicast", "b_reuse": 1,
+                         "note": "re-fetched per cluster/row block"},
+        }
 
     # ------------------------------------------------------------------
     def matmul_study(self, n: int = 256) -> dict[str, MatmulResult]:

@@ -1,0 +1,3 @@
+"""Distributed execution layer: sharding rules, step builders, multicast
+collectives (the TPU-fabric analogue of the paper's crossbar multicast),
+and gradient compression."""

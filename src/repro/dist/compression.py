@@ -1,0 +1,43 @@
+"""int8 block quantisation with error feedback for cross-pod gradients.
+
+Per 256-element block: scale = max|g|, q = round(g / scale * 127).  The
+quantisation residual is carried in an fp32 error-feedback state and
+added back the next step, so the running sum of compressed gradients is
+unbiased (the EF-SGD argument).  ``compress_grads`` returns dequantised
+gradients in the original dtype — the int8 wire format is an HLO-level
+concern (reduce-scatter of q + scales); this module models its numerics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def init_error_state(tree):
+    """fp32 zeros shaped like the gradient tree."""
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def _quantise(g: jax.Array, err: jax.Array):
+    gf = g.astype(jnp.float32) + err
+    flat = gf.reshape(-1)
+    n = flat.size
+    pad = -n % BLOCK
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    safe = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / safe * 127.0), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale / 127.0
+    deq = deq.reshape(-1)[:n].reshape(g.shape)
+    return deq.astype(g.dtype), gf - deq
+
+
+def compress_grads(grads, err_state):
+    """Returns (compressed grads, new error state)."""
+    pairs = jax.tree.map(_quantise, grads, err_state)
+    is_pair = lambda x: isinstance(x, tuple)
+    gq = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    new_err = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return gq, new_err

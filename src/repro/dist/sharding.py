@@ -1,0 +1,147 @@
+"""Sharding rules: logical parameter axes -> mesh axes, with repairs.
+
+The nn layer tags every parameter dimension with a *logical* axis name
+("vocab", "heads", "ff", "expert", "rnn", ...).  This module maps those
+to mesh axes per architecture and repairs the raw mapping so it is
+always valid:
+
+* a dimension whose size does not divide the mesh axis replicates
+  (whisper's 51865-token vocab on a 16-way model axis),
+* one mesh axis is never used twice in a PartitionSpec (MoE weights
+  shard experts over "model"; the ff dim then replicates),
+* small recurrent models opt out of tensor parallelism entirely
+  (§Perf S1) and instead spread the batch over the idle model axis
+  (§Perf S2).
+
+``param_pspecs`` needs only ``mesh.shape``/``mesh.axis_names`` (tests
+use a fake mesh); ``param_shardings`` builds real NamedShardings and
+optionally adds FSDP weight sharding over the data axis — the multicast
+weight-distribution data path (all-gather = the hw-multicast fetch).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.nn.spec import ParamSpec
+
+_is_spec = lambda x: isinstance(x, ParamSpec)
+
+# Tensor-parallel rnn sharding only pays off above this width; smaller
+# recurrent models run without TP (§Perf S1).
+_RNN_TP_MIN_D_MODEL = 2048
+
+# FSDP shards only leaves at least this large (norm scales etc. stay
+# replicated — the all-gather would cost more than the memory saved).
+_FSDP_MIN_ELEMS = 4096
+
+
+def _rnn_rule(cfg) -> str | None:
+    if cfg.rglru is None and cfg.ssm is None:
+        return None
+    return "model" if cfg.d_model >= _RNN_TP_MIN_D_MODEL else None
+
+
+def logical_rules(cfg, mesh) -> dict[str, str | None]:
+    """Logical axis -> mesh axis for this architecture."""
+    del mesh  # rules are mesh-shape independent; repairs are per-tensor
+    return {
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "expert": "model",
+        "rnn": _rnn_rule(cfg),
+        "rnn_in": None,
+        "embed": None,
+        "layers": None,
+    }
+
+
+def _uses_model_axis(cfg, rules) -> bool:
+    """Does any parameter actually shard over "model" for this arch?"""
+    if cfg.attn is not None or cfg.moe is not None or cfg.d_ff > 0:
+        return True
+    return rules.get("rnn") is not None
+
+
+def batch_axes(mesh, global_batch: int, cfg=None):
+    """Mesh axes the batch dimension shards over.
+
+    Architectures that leave the model axis idle (small recurrent
+    models, §Perf S2) spread the batch over it too — more parallelism
+    from the same mesh.  Falls back to plain data parallelism.
+    """
+    axes = ("data",)
+    if cfg is not None and not _uses_model_axis(cfg, logical_rules(cfg, mesh)):
+        if "model" in getattr(mesh, "axis_names", ()):
+            axes = ("data", "model")
+    sizes = dict(mesh.shape)
+    usable = tuple(a for a in axes if a in sizes)
+    n = math.prod(sizes[a] for a in usable) or 1
+    if global_batch % n != 0:  # uneven batch: shrink to the data axis
+        usable = ("data",) if "data" in sizes else ()
+    return usable
+
+
+def _repair(spec: ParamSpec, rules: dict, mesh_sizes: dict) -> P:
+    entries = []
+    used: set[str] = set()
+    for dim, logical in zip(spec.shape, spec.logical_axes):
+        axis = rules.get(logical)
+        if axis is None or axis not in mesh_sizes:
+            entries.append(None)
+            continue
+        if axis in used or dim % mesh_sizes[axis] != 0:
+            entries.append(None)  # duplicate use / non-divisible: replicate
+            continue
+        used.add(axis)
+        entries.append(axis)
+    return P(*entries)
+
+
+def param_pspecs(cfg, spec_tree, mesh):
+    """PartitionSpec tree for a model spec tree (pure, no devices)."""
+    rules = logical_rules(cfg, mesh)
+    sizes = dict(mesh.shape)
+    return jax.tree.map(lambda s: _repair(s, rules, sizes), spec_tree, is_leaf=_is_spec)
+
+
+def _add_fsdp(spec: ParamSpec, ps: P, mesh_sizes: dict) -> P:
+    if "data" not in mesh_sizes or math.prod(spec.shape) < _FSDP_MIN_ELEMS:
+        return ps
+    entries = list(ps) + [None] * (len(spec.shape) - len(ps))
+    if "data" in entries:
+        return ps
+    # shard the largest still-replicated non-layer dim over "data"
+    order = sorted(
+        range(len(spec.shape)), key=lambda d: spec.shape[d], reverse=True
+    )
+    for d in order:
+        if entries[d] is None and spec.logical_axes[d] != "layers" \
+                and spec.shape[d] % mesh_sizes["data"] == 0:
+            entries[d] = "data"
+            return P(*entries)
+    return ps
+
+
+def param_shardings(cfg, spec_tree, mesh, *, fsdp: bool = False):
+    """NamedSharding tree; ``fsdp=True`` adds weight sharding over the
+    data axis (weights are then all-gathered on use — the multicast
+    distribution path the paper accelerates)."""
+    rules = logical_rules(cfg, mesh)
+    sizes = dict(mesh.shape)
+
+    def one(s: ParamSpec) -> NamedSharding:
+        ps = _repair(s, rules, sizes)
+        if fsdp:
+            ps = _add_fsdp(s, ps, sizes)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree.map(one, spec_tree, is_leaf=_is_spec)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

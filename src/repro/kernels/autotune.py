@@ -1,0 +1,276 @@
+"""Shared block-size autotuner for all Pallas kernels.
+
+Replaces the hardcoded 128x128(x128) blocks in the ``ops.py`` entry
+points with a per-``(kernel, schedule, shape, dtype)`` choice, in three
+stages:
+
+1. **Candidate generation** — per kernel family, enumerate MXU/VPU
+   aligned block combinations clipped to the problem shape
+   (``candidates(...)``).
+2. **VMEM-footprint pruning** — every candidate carries the double
+   buffered VMEM working set of its schedule; anything over the budget
+   (default 75% of a 16 MiB core) is dropped before it can OOM Mosaic.
+3. **Selection** — either the analytic cost model (default: modeled HBM
+   traffic plus a per-grid-step overhead, so bigger blocks win until
+   VMEM runs out) or a measured sweep over the top candidates when a
+   ``runner`` is supplied (used by the benchmarks; in interpret mode
+   this times the interpreter, on TPU the Mosaic build).
+
+Results land in a process-level cache so entry points resolve repeat
+shapes for free.  The cache key is ``(kernel, schedule, shape, dtype)``;
+``cache_info()`` / ``clear_cache()`` expose it for tests and tools.
+
+This module must stay import-light: the kernel ``ops.py`` files import
+it, so it can never import them back (measured sweeps inject the kernel
+callable from the outside instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Iterable, Sequence
+
+import jax.numpy as jnp
+
+VMEM_BYTES = 16 * 2**20  # per-core VMEM (TPU v4/v5-class)
+VMEM_BUDGET = int(VMEM_BYTES * 0.75)  # slack for Mosaic spills/semaphores
+# Cost-model weight: one grid step "costs" this many equivalent HBM
+# bytes of launch/pipeline overhead — breaks ties toward fewer, larger
+# blocks without ever out-voting a real traffic difference.
+STEP_OVERHEAD_BYTES = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One block-size configuration plus its modeled resource usage."""
+
+    config: tuple[tuple[str, int], ...]  # sorted (name, value) pairs
+    vmem_bytes: int
+    grid_steps: int
+    hbm_bytes: float  # modeled traffic (0 when the schedule moves
+    #                   the same bytes for every block choice)
+
+    def dict(self) -> dict[str, int]:
+        return dict(self.config)
+
+    @property
+    def cost(self) -> float:
+        return self.hbm_bytes + STEP_OVERHEAD_BYTES * self.grid_steps
+
+
+def _mk(config: dict[str, int], vmem: int, steps: int, hbm: float = 0.0) -> Candidate:
+    return Candidate(tuple(sorted(config.items())), int(vmem), int(steps), float(hbm))
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _divisors(total: int, options: Iterable[int]) -> list[int]:
+    out = [o for o in options if o <= total and total % o == 0]
+    return out or [total]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _clip(options: Iterable[int], limit: int, align: int = 128) -> list[int]:
+    """Clip block options to the dimension extent, keeping hardware
+    alignment: the clamped value rounds *up* to ``align`` so Mosaic never
+    sees a non-multiple-of-128 block (the kernels zero-pad the array up
+    to the block instead).  Deduped, insertion-ordered."""
+    seen: dict[int, None] = {}
+    for o in options:
+        seen[min(o, _round_up(limit, align))] = None
+    return list(seen)
+
+
+def manual(config: dict[str, int]) -> Candidate:
+    """Wrap an explicit block config as a Candidate (for sweep baselines)."""
+    return _mk(config, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# candidate generators (one per kernel family)
+# ---------------------------------------------------------------------------
+
+_MM_LANE = (128, 256, 512)  # bn/bk: lane dims, 128-multiples only
+_MM_SUB = (64, 128, 256, 512)  # bm: sublane dim, 8-aligned suffices
+_GM_SUPER = (256, 512, 1024, 2048)
+
+
+def _matmul_candidates(schedule: str, shape: Sequence[int], dsize: int) -> list[Candidate]:
+    m, k, n = shape
+    out = []
+    if schedule == "mcast":
+        for bn, bk in itertools.product(_clip(_MM_LANE, n), _clip(_MM_LANE, k)):
+            # full-M A panel + acc/out panels resident; streams double-buffered
+            vmem = 2 * (m * bk + bk * bn) * dsize + m * bn * (4 + dsize)
+            steps = _cdiv(n, bn) * _cdiv(k, bk)
+            hbm = (m * k * _cdiv(n, bn) + k * n + m * n) * dsize
+            out.append(_mk({"bn": bn, "bk": bk}, vmem, steps, hbm))
+    elif schedule == "tiled":
+        for gm, bn, bk in itertools.product(
+            _clip(_GM_SUPER, max(m, 256), align=8),
+            _clip(_MM_LANE, n),
+            _clip(_MM_LANE, k),
+        ):
+            vmem = 2 * (gm * bk + bk * bn) * dsize + gm * bn * (4 + dsize)
+            steps = _cdiv(m, gm) * _cdiv(n, bn) * _cdiv(k, bk)
+            hbm = (m * k * _cdiv(n, bn) + k * n * _cdiv(m, gm) + m * n) * dsize
+            out.append(_mk({"gm": gm, "bn": bn, "bk": bk}, vmem, steps, hbm))
+    elif schedule == "unicast":
+        for bm, bn, bk in itertools.product(
+            _clip(_MM_SUB, m, align=8), _clip(_MM_LANE, n), _clip(_MM_LANE, k)
+        ):
+            vmem = 2 * (bm * bk + bk * bn + bm * bn) * dsize + bm * bn * 4
+            steps = _cdiv(m, bm) * _cdiv(n, bn) * _cdiv(k, bk)
+            hbm = (m * k * _cdiv(n, bn) + k * n * _cdiv(m, bm) + m * n) * dsize
+            out.append(_mk({"bm": bm, "bn": bn, "bk": bk}, vmem, steps, hbm))
+    else:
+        raise ValueError(f"unknown matmul schedule: {schedule!r}")
+    return out
+
+
+_FA_BLOCKS = (64, 128, 256, 512)
+
+
+def _flash_candidates(shape: Sequence[int], dsize: int) -> list[Candidate]:
+    b, h, sq, sk, d = shape
+    out = []
+    for bq, bk in itertools.product(_divisors(sq, _FA_BLOCKS), _divisors(sk, _FA_BLOCKS)):
+        # q/k/v/o blocks double-buffered + fp32 softmax state scratch
+        vmem = 2 * (bq * d + 2 * bk * d + bq * d) * dsize + bq * (2 + d) * 4
+        steps = b * h * _cdiv(sq, bq) * _cdiv(sk, bk)
+        out.append(_mk({"bq": bq, "bk": bk}, vmem, steps))
+    return out
+
+
+_SSD_CHUNKS = (32, 64, 128, 256)
+
+
+def _ssd_candidates(shape: Sequence[int], dsize: int) -> list[Candidate]:
+    b, h, s, p, n = shape
+    out = []
+    for chunk in _divisors(s, _SSD_CHUNKS):
+        # xdt/b/c/lcum/o blocks double-buffered + (P, N) state + (Q, Q) scores
+        vmem = 2 * (2 * chunk * p + 2 * chunk * n + chunk) * 4 + (p * n + chunk * chunk) * 4
+        steps = b * h * _cdiv(s, chunk)
+        out.append(_mk({"chunk": chunk}, vmem, steps))
+    return out
+
+
+_LRU_BLOCKS = (128, 256, 512)
+
+
+def _rglru_candidates(shape: Sequence[int], dsize: int) -> list[Candidate]:
+    b, s, d = shape
+    out = []
+    for bs, bd in itertools.product(_divisors(s, _LRU_BLOCKS), _divisors(d, _LRU_BLOCKS)):
+        vmem = 2 * 3 * bs * bd * 4 + bd * 4
+        steps = b * _cdiv(d, bd) * _cdiv(s, bs)
+        out.append(_mk({"bd": bd, "bs": bs}, vmem, steps))
+    return out
+
+
+_GENERATORS: dict[str, Callable[..., list[Candidate]]] = {
+    "matmul": _matmul_candidates,
+    "flash_attention": lambda schedule, shape, dsize: _flash_candidates(shape, dsize),
+    "ssd": lambda schedule, shape, dsize: _ssd_candidates(shape, dsize),
+    "rglru": lambda schedule, shape, dsize: _rglru_candidates(shape, dsize),
+}
+
+
+# ---------------------------------------------------------------------------
+# pruning + selection
+# ---------------------------------------------------------------------------
+
+
+def candidates(
+    kernel: str,
+    shape: Sequence[int],
+    dtype,
+    *,
+    schedule: str = "default",
+    budget_bytes: int = VMEM_BUDGET,
+) -> list[Candidate]:
+    """VMEM-pruned candidate configs, best cost-model score first."""
+    if kernel not in _GENERATORS:
+        raise ValueError(f"unknown kernel family: {kernel!r} (have {sorted(_GENERATORS)})")
+    dsize = jnp.dtype(dtype).itemsize
+    cands = _GENERATORS[kernel](schedule, tuple(shape), dsize)
+    pruned = [c for c in cands if c.vmem_bytes <= budget_bytes]
+    if not pruned:  # degenerate giant shape: keep the smallest footprint
+        pruned = [min(cands, key=lambda c: c.vmem_bytes)]
+    return sorted(pruned, key=lambda c: c.cost)
+
+
+def sweep(
+    cands: Sequence[Candidate],
+    runner: Callable[..., object],
+    *,
+    reps: int = 2,
+    max_trials: int = 8,
+) -> list[tuple[Candidate, float]]:
+    """Time ``runner(**config)`` for the top candidates; (cand, us) pairs,
+    fastest first.  Candidates that fail to run are skipped."""
+    timed: list[tuple[Candidate, float]] = []
+    for cand in list(cands)[:max_trials]:
+        try:
+            runner(**cand.dict())  # warm-up / compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                runner(**cand.dict())
+            timed.append((cand, (time.perf_counter() - t0) / reps * 1e6))
+        except Exception:  # noqa: BLE001 — an invalid config is just skipped
+            continue
+    if not timed:
+        raise RuntimeError("autotune sweep: every candidate failed to run")
+    return sorted(timed, key=lambda t: t[1])
+
+
+_CACHE: dict[tuple, dict[str, int]] = {}
+
+
+def cache_key(kernel: str, schedule: str, shape: Sequence[int], dtype) -> tuple:
+    return (kernel, schedule, tuple(int(s) for s in shape), jnp.dtype(dtype).name)
+
+
+def best_config(
+    kernel: str,
+    shape: Sequence[int],
+    dtype,
+    *,
+    schedule: str = "default",
+    runner: Callable[..., object] | None = None,
+    budget_bytes: int = VMEM_BUDGET,
+    max_trials: int = 8,
+) -> dict[str, int]:
+    """Best block config for ``(kernel, schedule, shape, dtype)``.
+
+    Cost-model pick by default (cheap, deterministic — safe to call at
+    trace time from the jitted entry points); measured sweep when a
+    ``runner(**config)`` callable is given.  Either way the winner is
+    cached for the process lifetime.
+    """
+    key = cache_key(kernel, schedule, shape, dtype)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return dict(hit)
+    cands = candidates(kernel, shape, dtype, schedule=schedule, budget_bytes=budget_bytes)
+    if runner is None:
+        best = cands[0].dict()
+    else:
+        best = sweep(cands, runner, max_trials=max_trials)[0][0].dict()
+    _CACHE[key] = dict(best)
+    return best
+
+
+def cache_info() -> dict[tuple, dict[str, int]]:
+    return {k: dict(v) for k, v in _CACHE.items()}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()

@@ -1,0 +1,14 @@
+"""JAX version compatibility for the Pallas TPU kernels.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer JAX releases; resolve whichever this environment provides so the
+kernels run on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+assert CompilerParams is not None, "no Pallas TPU CompilerParams class found"

@@ -2,6 +2,12 @@
 
 On CPU (this container) the kernels run in interpret mode; on TPU they
 compile through Mosaic.  ``INTERPRET`` flips automatically.
+
+Block sizes default to ``None`` = resolved by the shared autotuner
+(`repro.kernels.autotune`) per (shape, dtype, schedule); pass explicit
+values to pin them.  Resolution happens once per jit trace: a config
+seeded into the autotune cache later (e.g. by a measured sweep) only
+affects shapes that have not been traced yet in this process.
 """
 from __future__ import annotations
 
@@ -9,18 +15,59 @@ import functools
 
 import jax
 
-from repro.kernels.matmul.matmul import matmul_mcast, matmul_unicast
+from repro.kernels import autotune
+from repro.kernels.matmul.matmul import (
+    matmul_mcast,
+    matmul_mcast_tiled,
+    matmul_unicast,
+)
 
 INTERPRET = jax.default_backend() != "tpu"
 
 
+def _resolve(schedule: str, m: int, k: int, n: int, dtype, **given):
+    cfg = autotune.best_config("matmul", (m, k, n), dtype, schedule=schedule)
+    cfg.update({name: v for name, v in given.items() if v is not None})
+    return cfg
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "bk"))
-def mcast_matmul(a, b, *, bn: int = 128, bk: int = 128):
+def mcast_matmul(a, b, *, bn: int | None = None, bk: int | None = None):
     """Multicast-schedule matmul (one B fetch per tile)."""
-    return matmul_mcast(a, b, bn=bn, bk=bk, interpret=INTERPRET)
+    (m, k), n = a.shape, b.shape[1]
+    cfg = _resolve("mcast", m, k, n, a.dtype, bn=bn, bk=bk)
+    return matmul_mcast(a, b, **cfg, interpret=INTERPRET)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gm", "bn", "bk", "activation", "out_dtype")
+)
+def tiled_matmul(
+    a,
+    b,
+    bias=None,
+    *,
+    gm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    activation: str = "none",
+    out_dtype=None,
+):
+    """Two-level (supertile) multicast-schedule matmul with the fused
+    bias + activation + downcast epilogue."""
+    (m, k), n = a.shape, b.shape[1]
+    cfg = _resolve("tiled", m, k, n, a.dtype, gm=gm, bn=bn, bk=bk)
+    return matmul_mcast_tiled(
+        a, b, bias, **cfg, activation=activation, out_dtype=out_dtype,
+        interpret=INTERPRET,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
-def unicast_matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128):
+def unicast_matmul(
+    a, b, *, bm: int | None = None, bn: int | None = None, bk: int | None = None
+):
     """Multiple-unicast-schedule matmul (B re-fetched per row block)."""
-    return matmul_unicast(a, b, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+    (m, k), n = a.shape, b.shape[1]
+    cfg = _resolve("unicast", m, k, n, a.dtype, bm=bm, bn=bn, bk=bk)
+    return matmul_unicast(a, b, **cfg, interpret=INTERPRET)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _rglru_body(a_ref, b_ref, o_ref, h_ref, *, bs: int):
     @pl.when(pl.program_id(2) == 0)
@@ -57,7 +59,7 @@ def rglru_scan(
         out_specs=pl.BlockSpec((1, bs, bd), lambda bi, di, si: (bi, si, di)),
         out_shape=jax.ShapeDtypeStruct((bsz, s, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -11,23 +11,20 @@ pod axis adds the second hierarchy level (2 pods x 256 chips).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int | None = None):
     """Small mesh for CPU tests (requires >= data*model fake devices)."""
     if pod:
-        return jax.make_mesh(
+        return make_mesh(
             (pod, data, model), ("pod", "data", "model"),
             axis_types=(AxisType.Auto,) * 3,
         )
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    return make_mesh((data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2)

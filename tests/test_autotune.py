@@ -1,0 +1,127 @@
+"""The shared block-size autotuner: candidate generation, VMEM pruning,
+caching, and the measured-sweep path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+from repro.kernels.matmul.matmul import matmul_mcast_tiled
+from repro.kernels.matmul.ref import matmul_ref
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+def test_candidates_respect_vmem_budget():
+    for schedule in ("mcast", "tiled", "unicast"):
+        cands = autotune.candidates(
+            "matmul", (4096, 2048, 2048), jnp.float32, schedule=schedule
+        )
+        assert cands, schedule
+        assert all(c.vmem_bytes <= autotune.VMEM_BUDGET for c in cands)
+
+
+def test_candidates_sorted_by_cost_and_clipped():
+    cands = autotune.candidates("matmul", (256, 256, 256), jnp.float32, schedule="tiled")
+    costs = [c.cost for c in cands]
+    assert costs == sorted(costs)
+    # no block exceeds the problem dimensions it tiles
+    for c in cands:
+        cfg = c.dict()
+        assert cfg["bn"] <= 256 and cfg["bk"] <= 256 and cfg["gm"] <= 256
+
+
+def test_degenerate_shape_keeps_smallest_candidate():
+    # budget so small everything is pruned -> smallest footprint survives
+    cands = autotune.candidates(
+        "matmul", (512, 512, 512), jnp.float32, schedule="unicast", budget_bytes=1
+    )
+    assert len(cands) == 1
+
+
+def test_flash_ssd_rglru_candidates_divide_shapes():
+    for c in autotune.candidates("flash_attention", (2, 4, 384, 384, 64), jnp.float32):
+        cfg = c.dict()
+        assert 384 % cfg["bq"] == 0 and 384 % cfg["bk"] == 0
+    for c in autotune.candidates("ssd", (1, 2, 384, 64, 32), jnp.float32):
+        assert 384 % c.dict()["chunk"] == 0
+    for c in autotune.candidates("rglru", (2, 384, 256), jnp.float32):
+        cfg = c.dict()
+        assert 384 % cfg["bs"] == 0 and 256 % cfg["bd"] == 0
+
+
+def test_matmul_candidates_are_lane_aligned():
+    """Blocks clipped to irregular dims round up to 128 (Mosaic lane
+    alignment) — the kernels zero-pad the operands up to the block."""
+    for schedule in ("mcast", "tiled", "unicast"):
+        for c in autotune.candidates("matmul", (136, 130, 140), jnp.float32,
+                                     schedule=schedule):
+            for name, v in c.dict().items():
+                align = 8 if name in ("gm", "bm") else 128  # sublane vs lane
+                assert v % align == 0, (schedule, name, v)
+
+
+def test_unknown_kernel_raises():
+    with pytest.raises(ValueError):
+        autotune.candidates("conv", (8, 8), jnp.float32)
+
+
+def test_best_config_caches_per_key():
+    cfg1 = autotune.best_config("matmul", (512, 256, 256), jnp.float32, schedule="tiled")
+    assert autotune.cache_key("matmul", "tiled", (512, 256, 256), jnp.float32) in (
+        autotune.cache_info()
+    )
+    cfg2 = autotune.best_config("matmul", (512, 256, 256), jnp.float32, schedule="tiled")
+    assert cfg1 == cfg2
+    # different dtype -> different key
+    autotune.best_config("matmul", (512, 256, 256), jnp.bfloat16, schedule="tiled")
+    assert len(autotune.cache_info()) == 2
+
+
+def test_measured_sweep_picks_fastest_and_caches():
+    calls = []
+
+    def runner(**cfg):
+        calls.append(cfg)
+
+    cands = autotune.candidates("matmul", (512, 256, 256), jnp.float32, schedule="tiled")
+    best = autotune.best_config(
+        "matmul", (512, 256, 256), jnp.float32, schedule="tiled",
+        runner=runner, max_trials=3,
+    )
+    assert best in [c.dict() for c in cands]
+    assert len(calls) <= 3 * 3  # warm-up + 2 reps per trial
+    # cached: a second call must not re-run the sweep
+    n_calls = len(calls)
+    autotune.best_config(
+        "matmul", (512, 256, 256), jnp.float32, schedule="tiled", runner=runner
+    )
+    assert len(calls) == n_calls
+
+
+def test_sweep_skips_failing_candidates():
+    cands = autotune.candidates("matmul", (256, 256, 256), jnp.float32, schedule="tiled")
+
+    def runner(**cfg):
+        if cfg == cands[0].dict():
+            raise RuntimeError("boom")
+
+    timed = autotune.sweep(cands, runner, max_trials=3)
+    assert cands[0] not in [c for c, _ in timed]
+
+
+def test_autotuned_config_runs_correctly():
+    """End-to-end: the config the tuner picks produces a correct matmul."""
+    m, k, n = 512, 256, 384
+    cfg = autotune.best_config("matmul", (m, k, n), jnp.float32, schedule="tiled")
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    out = matmul_mcast_tiled(a, b, **cfg, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(matmul_ref(a, b)), rtol=2e-3, atol=2e-3
+    )

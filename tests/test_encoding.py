@@ -1,8 +1,7 @@
 """Property tests for the mask-form multi-address encoding (paper II-A)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.encoding import (
     ADDR_MASK,

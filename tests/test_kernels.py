@@ -10,8 +10,8 @@ import pytest
 
 from repro.kernels.flash_attention.ops import flash
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.matmul.matmul import hbm_traffic_model
-from repro.kernels.matmul.ops import mcast_matmul, unicast_matmul
+from repro.kernels.matmul.matmul import hbm_traffic_model, matmul_mcast_tiled
+from repro.kernels.matmul.ops import mcast_matmul, tiled_matmul, unicast_matmul
 from repro.kernels.matmul.ref import matmul_ref
 from repro.kernels.rglru.ops import lru_scan
 from repro.kernels.rglru.ref import rglru_scan_ref
@@ -56,6 +56,19 @@ def test_matmul_unicast_schedule(shape, dtype):
     )
 
 
+@pytest.mark.parametrize("fn", [mcast_matmul, unicast_matmul])
+def test_matmul_non_divisible_shapes(fn):
+    """Regression: non-divisible shapes used to accumulate padding
+    garbage (NaN); all schedules now zero-pad exactly."""
+    m, k, n = 136, 130, 140
+    a = jax.random.normal(KEY, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), jnp.float32)
+    out = fn(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(matmul_ref(a, b)), rtol=2e-3, atol=2e-3
+    )
+
+
 def test_matmul_block_shape_sweep():
     a = jax.random.normal(KEY, (256, 256), jnp.float32)
     b = jax.random.normal(jax.random.fold_in(KEY, 1), (256, 256), jnp.float32)
@@ -73,6 +86,78 @@ def test_matmul_traffic_model_matches_paper_story():
     b_uni = 256 * 256 * 8 * 32
     b_mc = 256 * 256 * 8
     assert t["unicast_bytes"] - t["mcast_bytes"] == b_uni - b_mc
+
+
+# ---------------------------------------------------------------------------
+# tiled (supertile) multicast schedule
+# ---------------------------------------------------------------------------
+
+# (m, k, n, gm) — non-square, non-divisible, and M far beyond the flat
+# mcast schedule's VMEM panel limit (~2k fp32 rows).
+TILED_CASES = [
+    (256, 256, 256, 128),
+    (300, 200, 130, 128),  # nothing divides the blocks
+    (2048, 256, 384, 1024),
+    (4096, 128, 256, 512),  # supertile count > 1, uneven n/bn
+]
+
+
+@pytest.mark.parametrize("case", TILED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_tiled_schedule(case, dtype):
+    m, k, n, gm = case
+    a = jax.random.normal(KEY, (m, k), dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), dtype)
+    out = tiled_matmul(a, b, gm=gm, bn=128, bk=128)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(matmul_ref(a, b), np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.slow
+def test_matmul_tiled_huge_m():
+    """M = 8192: the flat mcast panel cannot fit VMEM, the supertile can."""
+    m, k, n = 8192, 256, 256
+    a = jax.random.normal(KEY, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), jnp.float32)
+    out = matmul_mcast_tiled(a, b, gm=1024, bn=128, bk=128, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(matmul_ref(a, b)), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_matmul_tiled_fused_epilogue():
+    m, k, n = 256, 128, 192
+    a = jax.random.normal(KEY, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), jnp.float32)
+    bias = jax.random.normal(jax.random.fold_in(KEY, 2), (n,), jnp.float32)
+    out = tiled_matmul(a, b, bias, gm=128, bn=128, bk=128,
+                       activation="relu", out_dtype=jnp.bfloat16)
+    assert out.dtype == jnp.bfloat16
+    ref = jax.nn.relu(
+        jnp.dot(a, b, preferred_element_type=jnp.float32) + bias
+    ).astype(jnp.bfloat16)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_matmul_tiled_bad_activation():
+    a = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        matmul_mcast_tiled(a, a, activation="tanhh", interpret=True)
+
+
+def test_tiled_traffic_between_mcast_and_unicast():
+    """Regression: the supertile schedule's modeled B traffic must sit
+    strictly between the ideal mcast fetch and the unicast re-fetch."""
+    t = hbm_traffic_model(2048, 512, 512, bm=128, bn=128, bk=128, gm=1024)
+    assert t["mcast_b_bytes"] < t["tiled_b_bytes"] < t["unicast_b_bytes"]
+    # one fetch per supertile: exactly ceil(M/gm) x the ideal
+    assert t["tiled_b_bytes"] == t["mcast_b_bytes"] * 2
+    assert t["unicast_b_bytes"] == t["mcast_b_bytes"] * 16
+    # and the OI ordering follows
+    assert t["unicast_oi"] < t["tiled_oi"] < t["mcast_oi"]
 
 
 # ---------------------------------------------------------------------------

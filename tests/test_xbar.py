@@ -1,7 +1,6 @@
 """Protocol tests for the multicast crossbar simulator (paper II-A)."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.encoding import AddrRule, cluster_window, mcast_request_for_clusters
 from repro.core.xbar import DeadlockError, McastXbar, Resp, WriteTxn, join_resps
