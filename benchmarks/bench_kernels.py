@@ -1,64 +1,87 @@
 """Pallas kernel sanity timings (interpret mode on CPU — correctness
 path; TPU wall-clock comes from the Mosaic build on real hardware).
 
-Block sizes are left to the shared autotuner (``repro.kernels.autotune``)
-— the derived column records the config it picked.
+Every row goes through the KernelOp dispatch API (``repro.kernels``):
+the pallas rows force ``policy="pallas"``/a schedule name, and the
+``kernel_linear_dispatch`` row runs the *default* policy — off-TPU that
+resolves to the reference backend, which is exactly what the nn layer
+executes in CI.  The derived column records what dispatch picked.
+
+Timing protocol, tuned for the regression gate in
+``benchmarks/check_regression.py``:
+
+* every gated row is sized to land well above the gate's min-us floor
+  (sub-5ms interpret timings are scheduler-jitter bound);
+* reps are **interleaved round-robin across kernels** and each row keeps
+  its minimum — a transient load spike then hits all rows alike
+  (common-mode, which the gate's median normalization cancels) instead
+  of poisoning whichever single row was mid-burst.
 """
 import time
 
 import jax
 import jax.numpy as jnp
 
-
-def _time(fn, *args, reps=3):
-    fn(*args).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        fn(*args).block_until_ready()
-    return (time.perf_counter() - t0) / reps * 1e6
+REPS = 20
 
 
 def run() -> list[str]:
+    from repro import kernels
     from repro.kernels import autotune
 
     k = jax.random.PRNGKey(0)
-    rows = []
 
-    from repro.kernels.flash_attention.ops import flash
+    flash = kernels.op("flash_attention")
+    q = jax.random.normal(k, (1, 4, 512, 64), jnp.float32)
+    kv = jax.random.normal(k, (1, 2, 512, 64), jnp.float32)
+    fa_cfg = autotune.best_config("flash_attention", (1, 4, 512, 512, 64), jnp.float32)
 
-    q = jax.random.normal(k, (1, 4, 256, 64), jnp.float32)
-    kv = jax.random.normal(k, (1, 2, 256, 64), jnp.float32)
-    cfg = autotune.best_config("flash_attention", (1, 4, 256, 256, 64), jnp.float32)
-    rows.append(
-        f"kernel_flash_attn,{_time(lambda a: flash(a, kv, kv), q):.1f},"
-        f"GQA 4q/2kv s256 d64 cfg={cfg}"
-    )
+    # rglru's interpret path is a sequential fori_loop — latency-bound
+    # and too jittery for the hard gate at any size, so this row is
+    # deliberately kept under the gate's min-us floor (advisory only)
+    lru = kernels.op("rglru")
+    a = jax.nn.sigmoid(jax.random.normal(k, (1, 512, 512)))
+    x = jax.random.normal(k, (1, 512, 512))
+    lru_cfg = autotune.best_config("rglru", (1, 512, 512), jnp.float32)
 
-    from repro.kernels.rglru.ops import lru_scan
+    ssd = kernels.op("ssd")
+    xdt = jax.random.normal(k, (1, 4, 1024, 64), jnp.float32)
+    bm = jax.random.normal(k, (1, 1024, 64), jnp.float32)
+    log_a = -jax.nn.softplus(jax.random.normal(k, (1, 4, 1024)))
+    ssd_cfg = autotune.best_config("ssd", (1, 4, 1024, 64, 64), jnp.float32)
 
-    a = jax.nn.sigmoid(jax.random.normal(k, (1, 256, 256)))
-    x = jax.random.normal(k, (1, 256, 256))
-    cfg = autotune.best_config("rglru", (1, 256, 256), jnp.float32)
-    rows.append(f"kernel_rglru,{_time(lambda u: lru_scan(u, x), a):.1f},scan s256 d256 cfg={cfg}")
+    aa = jax.random.normal(k, (4096, 512), jnp.float32)
+    bb = jax.random.normal(k, (512, 512), jnp.float32)
+    mm_cfg = autotune.best_config("matmul", (4096, 512, 512), jnp.float32, schedule="tiled")
 
-    from repro.kernels.ssd.ops import ssd_core
+    # the nn layer's actual CI path: default policy -> reference backend,
+    # under jit like every model forward that calls kernels.linear
+    sched, backend, _ = kernels.resolve("matmul", (4096, 512, 512), jnp.float32)
+    bias = jax.random.normal(k, (512,), jnp.float32)
+    lin = jax.jit(lambda u: kernels.linear(u, bb, bias=bias, activation="silu"))
 
-    xdt = jax.random.normal(k, (1, 2, 256, 64), jnp.float32)
-    bm = jax.random.normal(k, (1, 256, 64), jnp.float32)
-    log_a = -jax.nn.softplus(jax.random.normal(k, (1, 2, 256)))
-    cfg = autotune.best_config("ssd", (1, 2, 256, 64, 64), jnp.float32)
-    rows.append(
-        f"kernel_ssd,{_time(lambda u: ssd_core(u, bm, bm, log_a), xdt):.1f},"
-        f"chunked s256 P64 N64 cfg={cfg}"
-    )
+    bench = [
+        ("kernel_flash_attn", lambda: flash(q, kv, kv, policy="pallas"),
+         f"GQA 4q/2kv s512 d64 cfg={fa_cfg}"),
+        ("kernel_rglru", lambda: lru(a, x, policy="pallas"),
+         f"scan s512 d512 cfg={lru_cfg}"),
+        ("kernel_ssd", lambda: ssd(xdt, bm, bm, log_a, policy="pallas"),
+         f"chunked h4 s1024 P64 N64 cfg={ssd_cfg}"),
+        ("kernel_matmul_tiled", lambda: kernels.linear(aa, bb, policy="tiled"),
+         f"supertile M4096 K512 N512 cfg={mm_cfg}"),
+        ("kernel_linear_dispatch", lambda: lin(aa),
+         f"default policy -> {sched}/{backend} M4096 K512 N512 fused bias+silu"),
+    ]
 
-    from repro.kernels.matmul.ops import tiled_matmul
+    for _, fn, _ in bench:
+        fn().block_until_ready()  # compile
+    best = {name: float("inf") for name, _, _ in bench}
+    for _ in range(REPS):  # round-robin: load spikes hit all rows alike
+        for name, fn, _ in bench:
+            t0 = time.perf_counter()
+            fn().block_until_ready()
+            best[name] = min(best[name], time.perf_counter() - t0)
 
-    aa = jax.random.normal(k, (1024, 256), jnp.float32)
-    bb = jax.random.normal(k, (256, 256), jnp.float32)
-    cfg = autotune.best_config("matmul", (1024, 256, 256), jnp.float32, schedule="tiled")
-    rows.append(
-        f"kernel_matmul_tiled,{_time(lambda u: tiled_matmul(u, bb), aa):.1f},"
-        f"supertile M1024 K256 N256 cfg={cfg}"
-    )
-    return rows
+    return [
+        f"{name},{best[name] * 1e6:.1f},{derived}" for name, _, derived in bench
+    ]

@@ -7,10 +7,12 @@ import time
 import jax
 import jax.numpy as jnp
 
+import repro.kernels as kernels
 from repro.core.occamy import OccamySystem
 from repro.kernels import autotune
 from repro.kernels.matmul.matmul import hbm_traffic_model, matmul_mcast_tiled
-from repro.kernels.matmul.ops import INTERPRET, mcast_matmul, tiled_matmul, unicast_matmul
+
+INTERPRET = jax.default_backend() != "tpu"
 
 
 def run() -> list[str]:
@@ -50,13 +52,12 @@ def run() -> list[str]:
     # interpret-mode wall time (CPU correctness path, not TPU perf)
     a = jax.random.normal(jax.random.PRNGKey(0), (256, 256), jnp.float32)
     b = jax.random.normal(jax.random.PRNGKey(1), (256, 256), jnp.float32)
-    for name, fn in (
-        ("mcast", mcast_matmul), ("tiled", tiled_matmul), ("unicast", unicast_matmul)
-    ):
-        fn(a, b).block_until_ready()  # compile
+    for name in ("mcast", "tiled", "unicast"):
+        fn = lambda: kernels.linear(a, b, policy=name)  # noqa: E731
+        fn().block_until_ready()  # compile
         t0 = time.perf_counter()
         for _ in range(3):
-            fn(a, b).block_until_ready()
+            fn().block_until_ready()
         us = (time.perf_counter() - t0) / 3 * 1e6
         out.append(f"fig3c_kernel_{name}_interp,{us:.1f},schedule={name}")
 

@@ -1,0 +1,137 @@
+"""Fail CI when a kernel benchmark regresses vs. the committed baseline.
+
+Compares the ``kernel_*`` rows of a freshly generated bench JSON (see
+``benchmarks/run.py --json``) against the committed ``BENCH_kernels.json``
+and exits non-zero if any kernel regressed by more than the threshold
+(default 15% throughput), or if a kernel covered by the baseline
+disappeared from the fresh run (lost coverage is a silent regression
+too).  New kernels with no baseline row only warn — their first
+committed run becomes the baseline.
+
+Comparison is **relative, not absolute**: the committed baseline and the
+CI runner are different machines under different load, so raw
+microseconds don't transfer.  The machine-speed factor is estimated as
+the *median* of the per-kernel fresh/baseline ratios (robust to a single
+kernel regressing or speeding up), and a kernel fails when its own ratio
+exceeds the median by more than the threshold — i.e. it got slower
+relative to its peers, which is exactly what a kernel-specific
+regression in a PR looks like.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --baseline BENCH_kernels.json --fresh BENCH_fresh.json [--threshold 0.15]
+
+Non-kernel rows (fig3a_* area/timing model numbers etc.) are derived
+analytically and tracked by tests, not by this timing gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+KERNEL_PREFIX = "kernel_"
+
+
+def compare(
+    baseline: dict[str, dict],
+    fresh: dict[str, dict],
+    *,
+    threshold: float = 0.15,
+    min_us: float = 5000.0,
+    prefix: str = KERNEL_PREFIX,
+) -> tuple[list[str], list[str]]:
+    """Returns (failures, warnings) as human-readable lines."""
+    failures, warnings_ = [], []
+    base_rows = {k: float(v["us"]) for k, v in baseline.items() if k.startswith(prefix)}
+    fresh_rows = {k: float(v["us"]) for k, v in fresh.items() if k.startswith(prefix)}
+
+    ratios = {
+        k: fresh_rows[k] / base_rows[k]
+        for k in set(base_rows) & set(fresh_rows)
+        if base_rows[k] > 0 and fresh_rows[k] > 0
+    }
+    # the machine-speed factor comes from gated rows only: advisory
+    # (sub-floor) rows are advisory precisely because they are jitter
+    # bound, and letting them vote would skew the median they're exempt
+    # from
+    # advisory status is decided by the BASELINE timing alone: it is the
+    # committed, deterministic side, so a row stays advisory on slower
+    # CI runners too (fresh-side timings scale with the machine)
+    gated_ratios = [r for k, r in ratios.items() if base_rows[k] >= min_us]
+    machine = statistics.median(gated_ratios) if gated_ratios else 1.0
+
+    # Known blind spot of relative gating: a regression hitting >= half
+    # the gated rows is absorbed into the median as "slower machine".
+    # The reference-backed dispatch row anchors a cross-check — pallas
+    # rows collectively drifting past it is suspicious even when the
+    # per-row gate stays green.  Advisory, not failing: absolute
+    # cross-machine gating is unreliable by construction.
+    ref_ratio = ratios.get("kernel_linear_dispatch")
+    if ref_ratio and machine / ref_ratio > 1.0 + threshold:
+        warnings_.append(
+            f"suite-wide: gated kernels are {(machine / ref_ratio - 1) * 100:.0f}% "
+            f"slower relative to the reference-backend anchor row — possible "
+            f"broad kernel/dispatch regression the per-row gate cannot see"
+        )
+
+    for name, base_us in sorted(base_rows.items()):
+        if name not in fresh_rows:
+            failures.append(f"{name}: missing from fresh run (baseline {base_us:.1f}us)")
+            continue
+        if name not in ratios:
+            warnings_.append(f"{name}: non-positive timing, skipped")
+            continue
+        if base_us < min_us:
+            # sub-floor rows can't support a 15% gate: scheduler jitter
+            # alone exceeds it — keep them visible but advisory
+            warnings_.append(
+                f"{name}: baseline under the {min_us:.0f}us gate floor "
+                f"({fresh_rows[name]:.1f}us vs {base_us:.1f}us), advisory only"
+            )
+            continue
+        rel = ratios[name] / machine
+        if rel > 1.0 + threshold:
+            failures.append(
+                f"{name}: {(rel - 1.0) * 100:.0f}% slower than the suite median "
+                f"(threshold {threshold * 100:.0f}%; raw {fresh_rows[name]:.1f}us "
+                f"vs baseline {base_us:.1f}us, machine factor {machine:.2f}x)"
+            )
+    for name in sorted(set(fresh_rows) - set(base_rows)):
+        warnings_.append(f"{name}: new kernel, no baseline yet ({fresh_rows[name]:.1f}us)")
+    return failures, warnings_
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_kernels.json")
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated fractional slowdown per kernel")
+    ap.add_argument("--min-us", type=float, default=5000.0,
+                    help="rows faster than this in both runs only warn")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    failures, warnings_ = compare(
+        baseline, fresh, threshold=args.threshold, min_us=args.min_us
+    )
+    for w in warnings_:
+        print(f"WARN  {w}")
+    for fl in failures:
+        print(f"FAIL  {fl}")
+    if failures:
+        print(f"{len(failures)} kernel benchmark regression(s) over "
+              f"{args.threshold * 100:.0f}%", file=sys.stderr)
+        return 1
+    print(f"kernel benchmarks within {args.threshold * 100:.0f}% of baseline "
+          f"({len([k for k in baseline if k.startswith(KERNEL_PREFIX)])} rows checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

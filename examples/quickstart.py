@@ -37,30 +37,40 @@ for mode, r in sys_.matmul_study(n=256).items():
 
 # --- 4. the TPU kernel adaptation ------------------------------------------
 print()
-from repro.kernels.matmul.ops import mcast_matmul, tiled_matmul
+from repro import kernels
 from repro.kernels.matmul.ref import matmul_ref
 
 a = jax.random.normal(jax.random.PRNGKey(0), (256, 256), jnp.float32)
 b = jax.random.normal(jax.random.PRNGKey(1), (256, 256), jnp.float32)
 np.testing.assert_allclose(
-    np.asarray(mcast_matmul(a, b)), np.asarray(matmul_ref(a, b)), rtol=1e-3, atol=1e-3
+    np.asarray(kernels.linear(a, b, policy="mcast")),  # force the hw-multicast analogue
+    np.asarray(matmul_ref(a, b)), rtol=1e-3, atol=1e-3,
 )
 print("Pallas multicast-schedule matmul matches the jnp oracle ✓")
 
-# --- 5. the two-level (supertile) schedule + autotuner ---------------------
-# M = 4096 is far beyond the flat mcast schedule's VMEM panel limit; the
-# gm-row supertile keeps VMEM bounded while fetching B once per supertile
-# (the paper's group-level multicast).  Block sizes come from the shared
-# autotuner; the bias+activation epilogue is fused into the flush.
+# --- 5. schedule dispatch: the crossbar decision, for kernels --------------
+# kernels.linear picks its schedule the way the crossbar picks multicast:
+# from the problem.  At 65k rows the flat mcast schedule's full-M VMEM
+# panel can't fit, so its availability predicate excludes it and dispatch
+# lands on the gm-row supertile schedule (the paper's group-level
+# multicast) — B fetched once per supertile, VMEM bounded.  resolve()
+# runs nothing; the actual compute below forces "tiled" at a CPU-friendly
+# size with the bias+activation epilogue fused into the flush.  Off-TPU
+# the *default* policy falls back to the reference backend.
 from repro.kernels import autotune
 from repro.kernels.matmul.matmul import hbm_traffic_model
 
+sched, backend, _ = kernels.resolve("matmul", (65536, 2048, 2048), jnp.float32,
+                                    policy="pallas")
+assert sched == "tiled", "mcast's VMEM predicate must exclude M=65536"
+print(f"dispatch(M=65536, pallas) -> {sched}/{backend} (mcast panel > VMEM)")
+
 big_a = jax.random.normal(jax.random.PRNGKey(2), (4096, 256), jnp.float32)
 bias = jax.random.normal(jax.random.PRNGKey(3), (256,), jnp.float32)
-out = tiled_matmul(big_a, b, bias, activation="relu", out_dtype=jnp.bfloat16)
+out = kernels.linear(big_a, b, bias=bias, activation="relu",
+                     out_dtype=jnp.bfloat16, policy="tiled")
 cfg = autotune.best_config("matmul", (4096, 256, 256), jnp.float32, schedule="tiled")
+print(f"fused-epilogue linear (M=4096, tiled, blocks {cfg}) -> {out.shape} {out.dtype}")
 t = hbm_traffic_model(4096, 256, 256, bm=128, bn=128, bk=128, gm=cfg["gm"])
-print(f"tiled supertile matmul (M=4096) -> {out.shape} {out.dtype}, "
-      f"autotuned blocks {cfg}")
 print(f"B HBM traffic: tiled {t['tiled_b_bytes'] / t['mcast_b_bytes']:.0f}x ideal "
       f"vs unicast {t['unicast_b_bytes'] / t['mcast_b_bytes']:.0f}x ✓")

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import kernels
 from repro.configs.shapes import SHAPES, input_specs
 from repro.dist import sharding as shd
 from repro.dist.compression import compress_grads, init_error_state
@@ -82,7 +83,7 @@ def build_train_step(
     repl = shd.replicated(mesh)
     batch_sh, batch_abs = _batch_shardings(cfg, mesh, shape_name)
 
-    def loss_of(params, batch):
+    def _loss_impl(params, batch):
         kw = {}
         if "frames" in batch:
             kw["frames"] = batch["frames"]
@@ -92,6 +93,18 @@ def build_train_step(
         return mod.loss_fn(
             params, cfg, batch["tokens"], batch["labels"], loss_chunk=loss_chunk, **kw
         )
+
+    def loss_of(params, batch):
+        # every grad path differentiates this function, so the no-VJP
+        # guard lives here: the pallas kernels define no custom VJPs yet,
+        # and when dispatch would default to them (TPU, no explicit
+        # policy) training must trace the reference backend instead.  An
+        # explicit set_policy / REPRO_KERNEL_POLICY / --kernel-policy is
+        # honored as an opt-in override.
+        if kernels.policy_is_default() and jax.default_backend() == "tpu":
+            with kernels.use_policy("reference"):
+                return _loss_impl(params, batch)
+        return _loss_impl(params, batch)
 
     if compress_pod_grads:
 

@@ -1,3 +1,27 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel layer — one declarative dispatch surface over every family.
+
+``kernels.linear`` / ``kernels.grouped_linear`` cover the matmul-shaped
+ops (projections, MLPs, experts); ``kernels.op("<family>")`` reaches the
+rest (flash_attention, ssd, rglru).  Schedules and backends resolve per
+shape/dtype through the ``KernelOp`` registry in ``repro.kernels.api``;
+see that module for the policy semantics.
+"""
+from repro.kernels.api import (  # noqa: F401
+    ACTIVATIONS,
+    BACKENDS,
+    POLICY_ENV_VAR,
+    DispatchPolicy,
+    KernelOp,
+    Problem,
+    Schedule,
+    get_policy,
+    grouped_linear,
+    linear,
+    op,
+    ops,
+    policy_is_default,
+    register,
+    resolve,
+    set_policy,
+    use_policy,
+)

@@ -1,0 +1,649 @@
+"""Unified kernel-op API: a declarative ``KernelOp`` registry with
+schedule/backend dispatch.
+
+The paper's point is that the interconnect *schedule* (hw multicast vs.
+sw-tree vs. multi-unicast B distribution) is chosen per-transfer by the
+system, not hand-picked at every call site.  This module is the kernel
+layer's version of that: every kernel family registers its schedules as
+declarative :class:`Schedule` entries, and one dispatcher picks the
+schedule the way the crossbar picks multicast — automatically, from
+shape, dtype and a policy.
+
+Registry layout (one :class:`KernelOp` per family)::
+
+    matmul           mcast | tiled | unicast   (pallas)  + reference
+    flash_attention  pallas                              + reference
+    ssd              pallas                              + reference
+    rglru            pallas                              + reference
+
+Each :class:`Schedule` carries
+
+* an **availability predicate** over the :class:`Problem` (shape/dtype/
+  VMEM constraints — e.g. the flat ``mcast`` schedule needs its full-M
+  A/C panels to fit VMEM),
+* a **cost hook** reusing ``autotune.Candidate.cost`` (modeled HBM bytes
+  plus per-grid-step overhead) so the default pick is the cheapest
+  available schedule, and
+* the **callable** (a thin adapter over the ``pallas_call`` wrapper or
+  the pure-jnp ``ref.py`` oracle).
+
+Dispatch resolves, in order: the per-call ``policy=``, then the global
+policy (:func:`set_policy` / :func:`use_policy`), then the
+``REPRO_KERNEL_POLICY`` environment variable, then the default
+:class:`DispatchPolicy` — which runs the Pallas backend on TPU and
+transparently falls back to the reference backend everywhere else
+(interpret mode is reserved for explicitly forced pallas runs; routing
+every model projection through the interpreter would be pathologically
+slow).  Block sizes come from the shared autotuner unless the policy
+disables it or the caller pins them via ``blocks=``.
+
+Public surface:
+
+* :func:`linear` — ``act(x @ w + bias)`` for every projection-shaped
+  matmul in the model layer (the fused epilogue rides the tiled
+  schedule on TPU),
+* :func:`grouped_linear` — the per-expert (grouped) form used by MoE,
+* :func:`op` — ``op("flash_attention")(q, k, v, causal=...)`` etc.,
+* :func:`resolve` — introspection: which schedule/backend/config a call
+  would pick (used by tests and benchmarks).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import math
+import os
+import warnings
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.matmul.matmul import (
+    _ACTIVATIONS,
+    matmul_mcast,
+    matmul_mcast_tiled,
+    matmul_unicast,
+)
+from repro.kernels.rglru.ref import rglru_scan_ref
+from repro.kernels.rglru.rglru import rglru_scan
+from repro.kernels.ssd.ref import ssd_scan_ref
+from repro.kernels.ssd.ssd import ssd_scan
+
+POLICY_ENV_VAR = "REPRO_KERNEL_POLICY"
+BACKENDS = ("pallas", "reference")
+# single source of truth for activation names, shared with the nn layer
+# (nn.module.act_fn) so fused-epilogue and out-of-kernel applications of
+# the same name can never drift apart
+ACTIVATIONS = _ACTIVATIONS
+
+
+def _interpret() -> bool:
+    """Pallas kernels run in interpret mode off-TPU (checked per call so
+    tests can monkeypatch the backend)."""
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# dispatch policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPolicy:
+    """How a kernel call resolves its schedule.
+
+    ``schedule``  force a schedule by registry name (e.g. ``"tiled"``);
+                  off-TPU a forced pallas schedule runs in interpret mode.
+    ``backend``   force ``"pallas"`` or ``"reference"`` — the cheapest
+                  available schedule of that backend is picked.
+    ``autotune``  ``False`` uses each kernel's default block sizes
+                  instead of the shared autotuner.
+    """
+
+    schedule: str | None = None
+    backend: str | None = None
+    autotune: bool = True
+
+    def __post_init__(self):
+        if self.backend is not None and self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend: {self.backend!r} (have {BACKENDS})")
+
+    @classmethod
+    def parse(cls, text: str) -> "DispatchPolicy":
+        """Parse ``"tiled"`` / ``"reference"`` shorthands or the full
+        ``"schedule=tiled,backend=pallas,autotune=off"`` form (the
+        ``REPRO_KERNEL_POLICY`` syntax)."""
+        text = text.strip()
+        if not text:
+            return cls()
+        if "=" not in text:
+            if text in BACKENDS:
+                return cls(backend=text)
+            return cls(schedule=text)
+        kw: dict[str, Any] = {}
+        for item in text.split(","):
+            key, _, val = item.partition("=")
+            key, val = key.strip(), val.strip()
+            if key == "autotune":
+                kw[key] = val.lower() not in ("off", "0", "false", "no")
+            elif key in ("schedule", "backend"):
+                kw[key] = val or None
+            else:
+                raise ValueError(f"unknown policy field: {key!r} in {text!r}")
+        return cls(**kw)
+
+
+def as_policy(policy: "DispatchPolicy | str | None") -> "DispatchPolicy | None":
+    if policy is None or isinstance(policy, DispatchPolicy):
+        return policy
+    return DispatchPolicy.parse(policy)
+
+
+_GLOBAL_POLICY: DispatchPolicy | None = None
+
+
+def set_policy(policy: DispatchPolicy | str | None) -> None:
+    """Set the process-wide dispatch policy (None restores the default)."""
+    global _GLOBAL_POLICY
+    _GLOBAL_POLICY = as_policy(policy)
+
+
+def get_policy() -> DispatchPolicy:
+    """Effective global policy: ``set_policy`` > env var > default."""
+    if _GLOBAL_POLICY is not None:
+        return _GLOBAL_POLICY
+    env = os.environ.get(POLICY_ENV_VAR)
+    if env:
+        return DispatchPolicy.parse(env)
+    return DispatchPolicy()
+
+
+def policy_is_default() -> bool:
+    """True when no global policy is in force (neither :func:`set_policy`
+    nor ``REPRO_KERNEL_POLICY``) — i.e. dispatch would run its platform
+    default.  Gradient-taking callers use this to decide whether to pin
+    the reference backend (the pallas kernels define no custom VJPs yet)
+    without overriding an explicit user choice."""
+    return _GLOBAL_POLICY is None and not os.environ.get(POLICY_ENV_VAR)
+
+
+@contextlib.contextmanager
+def use_policy(policy: DispatchPolicy | str | None):
+    """Context manager form of :func:`set_policy` (tests, benchmarks)."""
+    global _GLOBAL_POLICY
+    prev = _GLOBAL_POLICY
+    _GLOBAL_POLICY = as_policy(policy)
+    try:
+        yield
+    finally:
+        _GLOBAL_POLICY = prev
+
+
+# ---------------------------------------------------------------------------
+# registry types
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """Static description of one kernel invocation (the autotune key)."""
+
+    shape: tuple[int, ...]
+    dtype: str  # dtype name — hashable, jit-static friendly
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """One way to run a kernel family.
+
+    ``fn(*arrays, cfg=..., opts=..., interpret=...)`` — ``cfg`` is the
+    resolved block-size dict (empty = kernel defaults), ``opts`` the
+    family's semantic options (activation, causal, window, ...).
+    """
+
+    name: str
+    backend: str  # "pallas" | "reference"
+    fn: Callable[..., jax.Array]
+    available: Callable[[Problem], bool] = lambda p: True
+    cost: Callable[[Problem], float] | None = None  # lower wins; None = last resort
+    autotune_schedule: str | None = None  # schedule key for autotune.best_config
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelOp:
+    """A kernel family: its schedules plus the shape/option plumbing."""
+
+    name: str
+    schedules: tuple[Schedule, ...]
+    problem: Callable[..., tuple[int, ...]]  # (*arrays) -> autotune shape key
+    opt_defaults: tuple[tuple[str, Any], ...] = ()
+
+    def schedule(self, name: str) -> Schedule:
+        for s in self.schedules:
+            if s.name == name:
+                return s
+        raise ValueError(
+            f"kernel op {self.name!r} has no schedule {name!r} "
+            f"(have {[s.name for s in self.schedules]})"
+        )
+
+    def _normalize_opts(self, opts: dict) -> dict:
+        out = dict(self.opt_defaults)
+        for key, val in opts.items():
+            if key not in out:
+                raise TypeError(f"{self.name}() got unexpected option {key!r}")
+            out[key] = val
+        return out
+
+    def resolve(
+        self, problem: Problem, policy: DispatchPolicy | str | None = None
+    ) -> tuple[Schedule, dict[str, int]]:
+        """Pick (schedule, block config) for a problem under a policy."""
+        pol = as_policy(policy) or get_policy()
+        if pol.schedule is not None:
+            sched = self.schedule(pol.schedule)
+            if pol.backend is not None and sched.backend != pol.backend:
+                raise ValueError(
+                    f"policy forces schedule {pol.schedule!r} (backend "
+                    f"{sched.backend}) but also backend {pol.backend!r}"
+                )
+        else:
+            backend = pol.backend or ("pallas" if not _interpret() else "reference")
+            of_backend = [s for s in self.schedules if s.backend == backend]
+            avail = [s for s in of_backend if s.available(problem)]
+            if pol.backend is not None:
+                # an explicitly forced backend is honored even when every
+                # availability predicate fails (they are conservative
+                # models) — silently substituting the other backend would
+                # make "force pallas" benchmarks measure XLA numbers
+                avail = avail or of_backend
+            elif not avail:  # default backend doesn't fit -> reference
+                avail = [s for s in self.schedules if s.backend == "reference"]
+            sched = min(
+                avail, key=lambda s: s.cost(problem) if s.cost else math.inf
+            )
+        cfg: dict[str, int] = {}
+        if pol.autotune and sched.autotune_schedule is not None:
+            cfg = autotune.best_config(
+                self.name, problem.shape, problem.dtype,
+                schedule=sched.autotune_schedule,
+            )
+        return sched, cfg
+
+    def __call__(
+        self,
+        *arrays: jax.Array,
+        policy: DispatchPolicy | str | None = None,
+        blocks: dict[str, int] | None = None,
+        **opts,
+    ) -> jax.Array:
+        opts = self._normalize_opts(opts)
+        problem = Problem(tuple(self.problem(*arrays)), jnp.dtype(arrays[0].dtype).name)
+        sched, cfg = self.resolve(problem, policy)
+        return _invoke(self.name, sched, arrays, cfg, blocks, opts)
+
+
+_REGISTRY: dict[str, KernelOp] = {}
+
+
+def register(kernel_op: KernelOp) -> KernelOp:
+    _REGISTRY[kernel_op.name] = kernel_op
+    return kernel_op
+
+
+def op(name: str) -> KernelOp:
+    """Look up a registered kernel family: ``op("flash_attention")(...)``."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel op: {name!r} (have {sorted(_REGISTRY)})"
+        ) from None
+
+
+def ops() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve(
+    name: str,
+    shape: Sequence[int],
+    dtype,
+    policy: DispatchPolicy | str | None = None,
+) -> tuple[str, str, dict[str, int]]:
+    """Which (schedule, backend, block config) a call would dispatch to —
+    introspection for tests, benchmarks and docs; runs nothing."""
+    sched, cfg = op(name).resolve(
+        Problem(tuple(int(s) for s in shape), jnp.dtype(dtype).name), policy
+    )
+    return sched.name, sched.backend, cfg
+
+
+def _invoke(
+    op_name: str,
+    sched: Schedule,
+    arrays: tuple,
+    cfg: dict[str, int],
+    blocks: dict[str, int] | None,
+    opts: dict,
+) -> jax.Array:
+    """Shared dispatch tail (explicit-block merge + jit trampoline) for
+    ``KernelOp.__call__`` and ``linear``'s pallas branch."""
+    if blocks:
+        cfg = dict(cfg, **{k: v for k, v in blocks.items() if v is not None})
+    if sched.backend == "reference":
+        cfg = {}  # block choices are meaningless for the oracle
+    return _run(
+        *arrays,
+        op_name=op_name,
+        schedule=sched.name,
+        cfg=tuple(sorted(cfg.items())),
+        opts=tuple(sorted(opts.items())),
+        interpret=_interpret(),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("op_name", "schedule", "cfg", "opts", "interpret")
+)
+def _run(*arrays, op_name, schedule, cfg, opts, interpret):
+    """Single jit'd trampoline for every dispatch — one compile cache per
+    (op, schedule, shapes, config, options) so eager callers (tests,
+    benchmarks, the deprecated wrappers) pay tracing once per key."""
+    sched = _REGISTRY[op_name].schedule(schedule)
+    return sched.fn(*arrays, cfg=dict(cfg), opts=dict(opts), interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _fits_vmem(kernel: str, schedule: str = "default") -> Callable[[Problem], bool]:
+    """Availability: some block candidate stays inside the VMEM budget."""
+
+    def ok(p: Problem) -> bool:
+        cands = autotune.candidates(kernel, p.shape, p.dtype, schedule=schedule)
+        return min(c.vmem_bytes for c in cands) <= autotune.VMEM_BUDGET
+
+    return ok
+
+
+def _model_cost(kernel: str, schedule: str = "default") -> Callable[[Problem], float]:
+    """Cost hook: the best candidate's ``autotune.Candidate.cost``."""
+
+    def cost(p: Problem) -> float:
+        return autotune.candidates(kernel, p.shape, p.dtype, schedule=schedule)[0].cost
+
+    return cost
+
+
+def _out_dtype(opts: dict, fallback) -> jnp.dtype:
+    return jnp.dtype(opts["out_dtype"]) if opts["out_dtype"] is not None else jnp.dtype(fallback)
+
+
+# ---------------------------------------------------------------------------
+# matmul family
+# ---------------------------------------------------------------------------
+
+
+def _mm_flat(kernel_fn):
+    """mcast/unicast don't fuse the epilogue in-kernel; bias + activation
+    + downcast run unfused (fp32) after the pallas_call."""
+
+    def fn(a, b, *maybe_bias, cfg, opts, interpret):
+        bias = maybe_bias[0] if maybe_bias else None
+        y = kernel_fn(a, b, **cfg, interpret=interpret)
+        if bias is not None or opts["activation"] != "none":
+            y = y.astype(jnp.float32)
+            if bias is not None:
+                y = y + bias.astype(jnp.float32)
+            y = _ACTIVATIONS[opts["activation"]](y)
+        return y.astype(_out_dtype(opts, a.dtype))
+
+    return fn
+
+
+def _mm_tiled(a, b, *maybe_bias, cfg, opts, interpret):
+    bias = maybe_bias[0] if maybe_bias else None
+    return matmul_mcast_tiled(
+        a, b, bias, **cfg,
+        activation=opts["activation"],
+        out_dtype=opts["out_dtype"],
+        interpret=interpret,
+    )
+
+
+def _reference_epilogue(y, bias, opts):
+    """Reference-backend epilogue, shared by ``linear`` and the 2-D
+    ``op("matmul")`` path.  Deliberately keeps the pre-dispatch
+    model-layer numerics (``out_dtype`` cast *before* the bias add,
+    activation in that dtype) rather than the kernels' fused fp32
+    epilogue: routing-sensitive consumers (MoE top-k) calibrated their
+    decode-vs-forward noise floor against exactly these rounding points."""
+    y = y.astype(_out_dtype(opts, y.dtype))
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return _ACTIVATIONS[opts["activation"]](y)
+
+
+def _mm_reference(a, b, *maybe_bias, cfg, opts, interpret):
+    bias = maybe_bias[0] if maybe_bias else None
+    return _reference_epilogue(jnp.dot(a, b), bias, opts)
+
+
+register(KernelOp(
+    name="matmul",
+    problem=lambda a, b, *rest: (a.shape[0], a.shape[1], b.shape[1]),
+    opt_defaults=(("activation", "none"), ("out_dtype", None)),
+    schedules=(
+        Schedule("tiled", "pallas", _mm_tiled,
+                 cost=_model_cost("matmul", "tiled"), autotune_schedule="tiled"),
+        Schedule("mcast", "pallas", _mm_flat(matmul_mcast),
+                 available=_fits_vmem("matmul", "mcast"),
+                 cost=_model_cost("matmul", "mcast"), autotune_schedule="mcast"),
+        Schedule("unicast", "pallas", _mm_flat(matmul_unicast),
+                 cost=_model_cost("matmul", "unicast"), autotune_schedule="unicast"),
+        Schedule("reference", "reference", _mm_reference),
+    ),
+))
+
+
+def linear(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bias: jax.Array | None = None,
+    activation: str | None = None,
+    out_dtype=None,
+    contract_dims: int = 1,
+    policy: DispatchPolicy | str | None = None,
+    blocks: dict[str, int] | None = None,
+) -> jax.Array:
+    """``act(x @ w + bias)`` through the dispatched matmul schedule.
+
+    The single entry point for every projection-shaped matmul in the
+    model layer: on TPU the tiled multicast schedule fuses the epilogue
+    into the kernel flush (no extra HBM round trip); off-TPU it runs the
+    reference backend with the model layer's original XLA numerics.
+
+    ``x``: (..., *k_dims); ``w``: (*k_dims, *out_dims) with
+    ``contract_dims`` leading axes contracted (e.g. attention's
+    ``o @ wo`` contracts (heads, head_dim)); ``bias`` broadcasts over
+    ``out_dims``.  Dispatch resolves on the flattened (M, K, N) problem,
+    but the reference backend runs an *unflattened* ``dot_general`` —
+    bit- and HLO-identical to the pre-registry einsum/``@`` call sites,
+    so GSPMD sharding decisions (and MoE top-k routing rounding) are
+    unchanged off-TPU.  The pallas backends flatten to 2-D for the
+    kernel grid.  ``out_dtype`` defaults to ``x.dtype`` (pallas) / the
+    dot's natural result dtype (reference).
+    """
+    k_dims, out_dims = w.shape[:contract_dims], w.shape[contract_dims:]
+    lead = x.shape[: x.ndim - contract_dims]
+    m = math.prod(lead)
+    k, n = math.prod(k_dims), math.prod(out_dims)
+    out_name = jnp.dtype(out_dtype).name if out_dtype is not None else None
+    opts = {"activation": activation or "none", "out_dtype": out_name}
+
+    mm = op("matmul")
+    sched, cfg = mm.resolve(Problem((m, k, n), jnp.dtype(x.dtype).name), policy)
+    if sched.backend == "reference":
+        # contracting dims listed high-to-low: einsum's canonical order,
+        # so this lowers bit-identically to the einsum/@ sites it replaced
+        contract = (
+            tuple(reversed(range(x.ndim - contract_dims, x.ndim))),
+            tuple(reversed(range(contract_dims))),
+        )
+        y = jax.lax.dot_general(x, w, (contract, ((), ())))
+        return _reference_epilogue(y, bias, opts)
+
+    arrays = (x.reshape(m, k), w.reshape(k, n))
+    if bias is not None:
+        arrays += (bias.reshape(n),)
+    y = _invoke("matmul", sched, arrays, cfg, blocks, opts)
+    return y.reshape(*lead, *out_dims)
+
+
+def grouped_linear(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    activation: str | None = None,
+    policy: DispatchPolicy | str | None = None,
+) -> jax.Array:
+    """Per-group linear (the MoE expert matmul): ``x``: (..., g, m, k),
+    ``w``: (g, k, n) -> (..., g, m, n) — one independent matmul per group.
+
+    The reference backend keeps the GShard einsum form (GSPMD shards the
+    group axis without resharding); the pallas backends run one dispatched
+    2-D matmul per group.
+    """
+    g, k, n = w.shape
+    lead = x.shape[:-3]
+    m = x.shape[-2]
+    m_eff = max(1, math.prod(lead)) * m
+    sched_name, backend, _ = resolve("matmul", (m_eff, k, n), x.dtype, policy)
+    if backend == "reference":
+        y = jnp.einsum("...gmk,gkn->...gmn", x, w)
+        if activation is not None:
+            y = _ACTIVATIONS[activation](y)
+        return y
+    # one vmapped kernel over the group axis (pallas_call lifts the
+    # batch dim into its grid) — schedule/config resolve once at trace
+    xt = x.reshape(-1, g, m, k).transpose(1, 0, 2, 3).reshape(g, -1, k)
+    y = jax.vmap(
+        lambda xi, wi: linear(xi, wi, activation=activation, policy=policy)
+    )(xt, w)
+    return y.reshape(g, -1, m, n).transpose(1, 0, 2, 3).reshape(*lead, g, m, n)
+
+
+# ---------------------------------------------------------------------------
+# flash attention family
+# ---------------------------------------------------------------------------
+
+
+def _flash_pallas(q, k, v, *, cfg, opts, interpret):
+    return flash_attention(
+        q, k, v, causal=opts["causal"], window=opts["window"],
+        softcap=opts["softcap"], **cfg, interpret=interpret,
+    )
+
+
+def _flash_reference(q, k, v, *, cfg, opts, interpret):
+    return attention_ref(
+        q, k, v, causal=opts["causal"], window=opts["window"],
+        softcap=opts["softcap"],
+    )
+
+
+register(KernelOp(
+    name="flash_attention",
+    # q: (b, h, sq, d); k/v: (b, kvh, sk, d) -> autotune key (b, h, sq, sk, d)
+    problem=lambda q, k, v: (*q.shape[:3], k.shape[2], q.shape[3]),
+    opt_defaults=(("causal", True), ("window", None), ("softcap", None)),
+    schedules=(
+        Schedule("pallas", "pallas", _flash_pallas,
+                 available=_fits_vmem("flash_attention"),
+                 cost=_model_cost("flash_attention"), autotune_schedule="default"),
+        Schedule("reference", "reference", _flash_reference),
+    ),
+))
+
+
+# ---------------------------------------------------------------------------
+# ssd family
+# ---------------------------------------------------------------------------
+
+
+def _ssd_pallas(xdt, b, c, log_a, *, cfg, opts, interpret):
+    bsz, h, s = log_a.shape
+    # default must divide s (the kernel asserts it): largest divisor <= 128
+    chunk = cfg.get("chunk") or max(d for d in range(1, min(128, s) + 1) if s % d == 0)
+    lc = log_a.reshape(bsz, h, s // chunk, chunk)
+    lcum = jnp.cumsum(lc, axis=-1).reshape(bsz, h, s, 1)
+    return ssd_scan(xdt, b, c, lcum, chunk=chunk, interpret=interpret)
+
+
+def _ssd_reference(xdt, b, c, log_a, *, cfg, opts, interpret):
+    return ssd_scan_ref(xdt, b, c, log_a)
+
+
+register(KernelOp(
+    name="ssd",
+    problem=lambda xdt, b, c, log_a: (*xdt.shape[:3], xdt.shape[3], b.shape[-1]),
+    schedules=(
+        Schedule("pallas", "pallas", _ssd_pallas,
+                 available=_fits_vmem("ssd"),
+                 cost=_model_cost("ssd"), autotune_schedule="default"),
+        Schedule("reference", "reference", _ssd_reference),
+    ),
+))
+
+
+# ---------------------------------------------------------------------------
+# rglru family
+# ---------------------------------------------------------------------------
+
+
+def _rglru_pallas(a, b, *, cfg, opts, interpret):
+    return rglru_scan(a, b, **cfg, interpret=interpret)
+
+
+def _rglru_reference(a, b, *, cfg, opts, interpret):
+    return rglru_scan_ref(a, b)
+
+
+register(KernelOp(
+    name="rglru",
+    problem=lambda a, b: a.shape,
+    schedules=(
+        Schedule("pallas", "pallas", _rglru_pallas,
+                 available=_fits_vmem("rglru"),
+                 cost=_model_cost("rglru"), autotune_schedule="default"),
+        Schedule("reference", "reference", _rglru_reference),
+    ),
+))
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim support (the old per-kernel ops.py entry points)
+# ---------------------------------------------------------------------------
+
+_DEPRECATED_SEEN: set[str] = set()
+
+
+def warn_deprecated(name: str, replacement: str) -> None:
+    """One DeprecationWarning per entry point per process."""
+    if name in _DEPRECATED_SEEN:
+        return
+    _DEPRECATED_SEEN.add(name)
+    warnings.warn(
+        f"repro.kernels: {name} is deprecated; use {replacement}",
+        DeprecationWarning,
+        stacklevel=3,
+    )

@@ -20,18 +20,45 @@ Results land in a process-level cache so entry points resolve repeat
 shapes for free.  The cache key is ``(kernel, schedule, shape, dtype)``;
 ``cache_info()`` / ``clear_cache()`` expose it for tests and tools.
 
+The cache also **persists to disk** (``~/.cache/repro/autotune.json``,
+override with ``REPRO_AUTOTUNE_CACHE``) so measured sweeps survive
+process restarts: the file is merged into the in-memory cache on first
+use (memory wins on conflicts) and rewritten atomically (temp file +
+``os.replace``, pre-merged with the current file contents so concurrent
+processes keep each other's entries).  Measured-sweep winners write
+through immediately; cost-model picks — cheap, deterministic
+recomputations — batch into one ``atexit`` flush (or an explicit
+``flush_disk_cache()``) so tracing a large model doesn't rewrite the
+file once per projection shape.  Persistence is best-effort — an
+unreadable or unwritable path degrades to the old process-local
+behaviour.
+
 This module must stay import-light: the kernel ``ops.py`` files import
 it, so it can never import them back (measured sweeps inject the kernel
 callable from the outside instead).
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
+import functools
 import itertools
+import json
+import os
+import pathlib
+import tempfile
 import time
 from typing import Callable, Iterable, Sequence
 
 import jax.numpy as jnp
+
+CACHE_ENV_VAR = "REPRO_AUTOTUNE_CACHE"
+# Bump whenever candidate generation, the cost model, or VMEM budgeting
+# changes semantics: persisted winners from an older format are ignored
+# (and the file is rewritten) instead of resurrecting configs the new
+# code would never pick — e.g. blocks that no longer fit a shrunk budget.
+CACHE_FORMAT_VERSION = 1
+_VERSION_KEY = "__format_version__"
 
 VMEM_BYTES = 16 * 2**20  # per-core VMEM (TPU v4/v5-class)
 VMEM_BUDGET = int(VMEM_BYTES * 0.75)  # slack for Mosaic spills/semaphores
@@ -197,14 +224,28 @@ def candidates(
     budget_bytes: int = VMEM_BUDGET,
 ) -> list[Candidate]:
     """VMEM-pruned candidate configs, best cost-model score first."""
+    return list(_candidates_cached(
+        kernel, tuple(int(s) for s in shape), jnp.dtype(dtype).name,
+        schedule, int(budget_bytes),
+    ))
+
+
+@functools.lru_cache(maxsize=4096)
+def _candidates_cached(
+    kernel: str, shape: tuple[int, ...], dtype_name: str,
+    schedule: str, budget_bytes: int,
+) -> tuple[Candidate, ...]:
+    # memoized: the dispatch layer probes candidates several times per
+    # resolution (availability predicate + cost hook per schedule, then
+    # best_config) and the generation is pure in these arguments
     if kernel not in _GENERATORS:
         raise ValueError(f"unknown kernel family: {kernel!r} (have {sorted(_GENERATORS)})")
-    dsize = jnp.dtype(dtype).itemsize
-    cands = _GENERATORS[kernel](schedule, tuple(shape), dsize)
+    dsize = jnp.dtype(dtype_name).itemsize
+    cands = _GENERATORS[kernel](schedule, shape, dsize)
     pruned = [c for c in cands if c.vmem_bytes <= budget_bytes]
     if not pruned:  # degenerate giant shape: keep the smallest footprint
         pruned = [min(cands, key=lambda c: c.vmem_bytes)]
-    return sorted(pruned, key=lambda c: c.cost)
+    return tuple(sorted(pruned, key=lambda c: c.cost))
 
 
 def sweep(
@@ -232,10 +273,88 @@ def sweep(
 
 
 _CACHE: dict[tuple, dict[str, int]] = {}
+_DISK = {"loaded": False, "dirty": False, "atexit": False}
 
 
 def cache_key(kernel: str, schedule: str, shape: Sequence[int], dtype) -> tuple:
     return (kernel, schedule, tuple(int(s) for s in shape), jnp.dtype(dtype).name)
+
+
+# ---------------------------------------------------------------------------
+# disk persistence (best-effort; sweeps survive process restarts)
+# ---------------------------------------------------------------------------
+
+
+def cache_path() -> pathlib.Path:
+    override = os.environ.get(CACHE_ENV_VAR)
+    if override:
+        return pathlib.Path(override)
+    return pathlib.Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+def _key_to_str(key: tuple) -> str:
+    kernel, schedule, shape, dtype = key
+    return "|".join([kernel, schedule, "x".join(str(s) for s in shape), dtype])
+
+
+def _str_to_key(text: str) -> tuple:
+    kernel, schedule, shape, dtype = text.split("|")
+    return (kernel, schedule, tuple(int(s) for s in shape.split("x")), dtype)
+
+
+def _load_disk() -> None:
+    """Merge the on-disk cache into memory, once per process (in-memory
+    entries win, so a live measured sweep is never clobbered)."""
+    if _DISK["loaded"]:
+        return
+    _DISK["loaded"] = True
+    try:
+        data = json.loads(cache_path().read_text())
+    except (OSError, ValueError):
+        return
+    if not isinstance(data, dict) or data.get(_VERSION_KEY) != CACHE_FORMAT_VERSION:
+        return  # other format/era: start fresh (next save rewrites it)
+    for key_str, cfg in data.items():
+        if key_str == _VERSION_KEY:
+            continue
+        try:
+            key = _str_to_key(key_str)
+            cfg = {str(k): int(v) for k, v in cfg.items()}
+        except (ValueError, AttributeError, TypeError):
+            continue  # foreign/corrupt row: skip, keep the rest
+        _CACHE.setdefault(key, cfg)
+
+
+def _save_disk() -> None:
+    """Atomically rewrite the cache file (temp file + rename), so a
+    crashed writer can never leave a truncated JSON behind.  The current
+    file contents are merged under ours first, so concurrent processes
+    (parallel benchmark runs, multi-host training) don't clobber each
+    other's freshly measured winners — last writer keeps both sets."""
+    _DISK["dirty"] = False  # best-effort: don't retry-loop on bad paths
+    path = cache_path()
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        payload: dict = {}
+        try:
+            on_disk = json.loads(path.read_text())
+            if isinstance(on_disk, dict) and on_disk.get(_VERSION_KEY) == CACHE_FORMAT_VERSION:
+                payload.update(on_disk)
+        except (OSError, ValueError):
+            pass
+        payload.update({_key_to_str(k): v for k, v in sorted(_CACHE.items())})
+        payload[_VERSION_KEY] = CACHE_FORMAT_VERSION
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".autotune-", suffix=".json")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, path)
+        except BaseException:
+            os.unlink(tmp)
+            raise
+    except OSError:
+        pass  # read-only home, full disk, ...: stay process-local
 
 
 def best_config(
@@ -253,8 +372,9 @@ def best_config(
     Cost-model pick by default (cheap, deterministic — safe to call at
     trace time from the jitted entry points); measured sweep when a
     ``runner(**config)`` callable is given.  Either way the winner is
-    cached for the process lifetime.
+    cached for the process lifetime and persisted to ``cache_path()``.
     """
+    _load_disk()
     key = cache_key(kernel, schedule, shape, dtype)
     hit = _CACHE.get(key)
     if hit is not None:
@@ -265,12 +385,39 @@ def best_config(
     else:
         best = sweep(cands, runner, max_trials=max_trials)[0][0].dict()
     _CACHE[key] = dict(best)
+    # measured winners are expensive to reproduce: write through at once.
+    # Cost-model picks are deterministic ms-scale recomputations, so they
+    # batch into one atexit flush instead of a full file rewrite per new
+    # shape at trace time.
+    _DISK["dirty"] = True
+    if runner is not None:
+        _save_disk()
+    elif not _DISK["atexit"]:
+        _DISK["atexit"] = True
+        atexit.register(flush_disk_cache)
     return best
+
+
+def flush_disk_cache() -> None:
+    """Write any batched (cost-model) cache entries to disk now."""
+    if _DISK["dirty"]:
+        _save_disk()
 
 
 def cache_info() -> dict[tuple, dict[str, int]]:
     return {k: dict(v) for k, v in _CACHE.items()}
 
 
-def clear_cache() -> None:
+def clear_cache(*, disk: bool = False) -> None:
+    """Drop the in-memory cache.  ``disk=True`` also deletes the
+    persisted file and re-arms load-on-first-use (a clean slate);
+    ``disk=False`` leaves the file alone and does NOT reload it, so a
+    test that clears the cache really sees recomputation."""
     _CACHE.clear()
+    _DISK["dirty"] = False
+    if disk:
+        _DISK["loaded"] = False
+        try:
+            cache_path().unlink()
+        except OSError:
+            pass

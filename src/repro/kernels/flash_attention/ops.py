@@ -1,35 +1,16 @@
-"""Jit'd public wrapper for the flash-attention kernel.
-
-Block sizes default to ``None`` = resolved by the shared autotuner
-(`repro.kernels.autotune`); pass explicit values to pin them.
-"""
+"""DEPRECATED flash-attention entry point — thin shim over the KernelOp
+registry.  New code: ``kernels.op("flash_attention")(q, k, v, ...)``."""
 from __future__ import annotations
 
-import functools
-
-import jax
-
-from repro.kernels import autotune
-from repro.kernels.flash_attention.flash_attention import flash_attention
-
-INTERPRET = jax.default_backend() != "tpu"
+from repro.kernels import api
 
 
-@functools.partial(
-    jax.jit, static_argnames=("causal", "window", "softcap", "bq", "bk")
-)
 def flash(
     q, k, v, *, causal=True, window=None, softcap=None,
     bq: int | None = None, bk: int | None = None,
 ):
-    b, h, sq, d = q.shape
-    sk = k.shape[2]
-    cfg = autotune.best_config("flash_attention", (b, h, sq, sk, d), q.dtype)
-    if bq is not None:
-        cfg["bq"] = bq
-    if bk is not None:
-        cfg["bk"] = bk
-    return flash_attention(
+    api.warn_deprecated("flash", 'kernels.op("flash_attention")(...)')
+    return api.op("flash_attention")(
         q, k, v, causal=causal, window=window, softcap=softcap,
-        **cfg, interpret=INTERPRET,
+        policy="pallas", blocks={"bq": bq, "bk": bk},
     )

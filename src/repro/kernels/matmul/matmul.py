@@ -49,7 +49,9 @@ _ACTIVATIONS = {
     "none": lambda x: x,
     "relu": jax.nn.relu,
     "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
     "silu": jax.nn.silu,
+    "sigmoid": jax.nn.sigmoid,  # RG-LRU gates fuse their sigmoid here
 }
 
 

@@ -1,47 +1,23 @@
-"""Jit'd public wrappers for the Occamy-schedule matmul kernels.
+"""DEPRECATED matmul entry points — thin shims over ``repro.kernels.api``.
 
-On CPU (this container) the kernels run in interpret mode; on TPU they
-compile through Mosaic.  ``INTERPRET`` flips automatically.
-
-Block sizes default to ``None`` = resolved by the shared autotuner
-(`repro.kernels.autotune`) per (shape, dtype, schedule); pass explicit
-values to pin them.  Resolution happens once per jit trace: a config
-seeded into the autotune cache later (e.g. by a measured sweep) only
-affects shapes that have not been traced yet in this process.
+``mcast_matmul`` / ``tiled_matmul`` / ``unicast_matmul`` predate the
+KernelOp registry; they now force their schedule through the same
+dispatch path as ``kernels.linear`` (so results are bit-identical to the
+new API) and emit one DeprecationWarning per process.  New code should
+call ``kernels.linear(..., policy="<schedule>")`` or just
+``kernels.linear(...)`` and let dispatch pick.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-
-from repro.kernels import autotune
-from repro.kernels.matmul.matmul import (
-    matmul_mcast,
-    matmul_mcast_tiled,
-    matmul_unicast,
-)
-
-INTERPRET = jax.default_backend() != "tpu"
+from repro.kernels import api
 
 
-def _resolve(schedule: str, m: int, k: int, n: int, dtype, **given):
-    cfg = autotune.best_config("matmul", (m, k, n), dtype, schedule=schedule)
-    cfg.update({name: v for name, v in given.items() if v is not None})
-    return cfg
-
-
-@functools.partial(jax.jit, static_argnames=("bn", "bk"))
 def mcast_matmul(a, b, *, bn: int | None = None, bk: int | None = None):
     """Multicast-schedule matmul (one B fetch per tile)."""
-    (m, k), n = a.shape, b.shape[1]
-    cfg = _resolve("mcast", m, k, n, a.dtype, bn=bn, bk=bk)
-    return matmul_mcast(a, b, **cfg, interpret=INTERPRET)
+    api.warn_deprecated("mcast_matmul", 'kernels.linear(..., policy="mcast")')
+    return api.linear(a, b, policy="mcast", blocks={"bn": bn, "bk": bk})
 
 
-@functools.partial(
-    jax.jit, static_argnames=("gm", "bn", "bk", "activation", "out_dtype")
-)
 def tiled_matmul(
     a,
     b,
@@ -55,19 +31,16 @@ def tiled_matmul(
 ):
     """Two-level (supertile) multicast-schedule matmul with the fused
     bias + activation + downcast epilogue."""
-    (m, k), n = a.shape, b.shape[1]
-    cfg = _resolve("tiled", m, k, n, a.dtype, gm=gm, bn=bn, bk=bk)
-    return matmul_mcast_tiled(
-        a, b, bias, **cfg, activation=activation, out_dtype=out_dtype,
-        interpret=INTERPRET,
+    api.warn_deprecated("tiled_matmul", 'kernels.linear(..., policy="tiled")')
+    return api.linear(
+        a, b, bias=bias, activation=activation, out_dtype=out_dtype,
+        policy="tiled", blocks={"gm": gm, "bn": bn, "bk": bk},
     )
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
 def unicast_matmul(
     a, b, *, bm: int | None = None, bn: int | None = None, bk: int | None = None
 ):
     """Multiple-unicast-schedule matmul (B re-fetched per row block)."""
-    (m, k), n = a.shape, b.shape[1]
-    cfg = _resolve("unicast", m, k, n, a.dtype, bm=bm, bn=bn, bk=bk)
-    return matmul_unicast(a, b, **cfg, interpret=INTERPRET)
+    api.warn_deprecated("unicast_matmul", 'kernels.linear(..., policy="unicast")')
+    return api.linear(a, b, policy="unicast", blocks={"bm": bm, "bn": bn, "bk": bk})

@@ -1,26 +1,11 @@
-"""Jit'd public wrapper for the RG-LRU scan kernel.
-
-Block sizes default to ``None`` = resolved by the shared autotuner
-(`repro.kernels.autotune`); pass explicit values to pin them.
-"""
+"""DEPRECATED RG-LRU entry point — thin shim over the KernelOp registry.
+New code: ``kernels.op("rglru")(a, b)``."""
 from __future__ import annotations
 
-import functools
-
-import jax
-
-from repro.kernels import autotune
-from repro.kernels.rglru.rglru import rglru_scan
-
-INTERPRET = jax.default_backend() != "tpu"
+from repro.kernels import api
 
 
-@functools.partial(jax.jit, static_argnames=("bd", "bs"))
 def lru_scan(a, b, *, bd: int | None = None, bs: int | None = None):
     """h_t = a_t h_{t-1} + b_t via the Pallas kernel."""
-    cfg = autotune.best_config("rglru", a.shape, a.dtype)
-    if bd is not None:
-        cfg["bd"] = bd
-    if bs is not None:
-        cfg["bs"] = bs
-    return rglru_scan(a, b, **cfg, interpret=INTERPRET)
+    api.warn_deprecated("lru_scan", 'kernels.op("rglru")(...)')
+    return api.op("rglru")(a, b, policy="pallas", blocks={"bd": bd, "bs": bs})

@@ -1,29 +1,11 @@
-"""Jit'd public wrapper for the SSD chunked-scan kernel.
-
-The chunk length defaults to ``None`` = resolved by the shared autotuner
-(`repro.kernels.autotune`); pass an explicit value to pin it.
-"""
+"""DEPRECATED SSD entry point — thin shim over the KernelOp registry.
+New code: ``kernels.op("ssd")(xdt, b, c, log_a)``."""
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import autotune
-from repro.kernels.ssd.ssd import ssd_scan
-
-INTERPRET = jax.default_backend() != "tpu"
+from repro.kernels import api
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
 def ssd_core(xdt, b, c, log_a, *, chunk: int | None = None):
-    """SSD core: takes per-step log decays, computes within-chunk cumsums
-    and runs the Pallas kernel.  log_a: (bsz, h, s)."""
-    bsz, h, s = log_a.shape
-    p, n = xdt.shape[-1], b.shape[-1]
-    if chunk is None:
-        chunk = autotune.best_config("ssd", (bsz, h, s, p, n), xdt.dtype)["chunk"]
-    lc = log_a.reshape(bsz, h, s // chunk, chunk)
-    lcum = jnp.cumsum(lc, axis=-1).reshape(bsz, h, s, 1)
-    return ssd_scan(xdt, b, c, lcum, chunk=chunk, interpret=INTERPRET)
+    """SSD core: per-step log decays in, chunked Pallas scan out."""
+    api.warn_deprecated("ssd_core", 'kernels.op("ssd")(...)')
+    return api.op("ssd")(xdt, b, c, log_a, policy="pallas", blocks={"chunk": chunk})

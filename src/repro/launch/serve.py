@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import kernels
 from repro.configs import ARCHS, get_config
 from repro.models import lm
 from repro.nn.attention import KvCache
@@ -129,8 +130,13 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--kernel-policy", default=None,
+                    help='kernel dispatch policy, e.g. "tiled" or '
+                         '"backend=reference" (see repro.kernels.api)')
     args = ap.parse_args()
 
+    if args.kernel_policy:
+        kernels.set_policy(args.kernel_policy)
     cfg = get_config(args.arch, reduced=args.reduced)
     params = lm.init(cfg, jax.random.PRNGKey(0))
     server = Server(cfg, params, max_batch=args.max_batch)

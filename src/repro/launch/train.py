@@ -24,6 +24,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import kernels
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCHS, get_config
 from repro.configs.shapes import ShapeCfg
@@ -37,6 +38,12 @@ from repro.optim import adamw
 
 
 def train_loop(args) -> dict:
+    if getattr(args, "kernel_policy", None):
+        # benchmarks force schedules/backends here; REPRO_KERNEL_POLICY
+        # works too, this flag just wins over the env var.  (The no-VJP
+        # reference-backend guard for gradients lives in dist/step.py's
+        # loss_of, where every grad path passes through.)
+        kernels.set_policy(args.kernel_policy)
     cfg = get_config(args.arch, reduced=args.reduced)
     if cfg.family == "audio":
         raise SystemExit("use examples/train_lm.py-style drivers for enc-dec")
@@ -139,6 +146,9 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--simulate-failure-at", type=int, default=None)
+    ap.add_argument("--kernel-policy", default=None,
+                    help='kernel dispatch policy, e.g. "tiled" or '
+                         '"schedule=tiled,autotune=off" (see repro.kernels.api)')
     args = ap.parse_args()
     out = train_loop(args)
     print(f"done; final loss {out['final_loss']:.4f}")

@@ -16,9 +16,10 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import kernels
 from repro.configs.base import ModelConfig
 from repro.nn import attention as attn_mod
-from repro.nn.attention import KvCache
+from repro.nn.attention import KvCache, proj_heads
 from repro.nn.module import layernorm, softcap, unembed
 from repro.nn.spec import ParamSpec, abstract_params, init_params, stacked
 from repro.models.lm import mlp, mlp_spec, _norm, _norm_spec
@@ -92,7 +93,7 @@ def abstract(cfg: ModelConfig):
 def encode(params, cfg: ModelConfig, frames):
     """frames: (batch, n_frames, frontend_dim) -> memory (b, n_frames, d)."""
     p = params["encoder"]
-    x = (frames @ p["proj"]["w"]).astype(jnp.bfloat16)
+    x = kernels.linear(frames, p["proj"]["w"], out_dtype=jnp.bfloat16)
     x = x + p["pos"]["table"][: x.shape[1]][None].astype(x.dtype)
 
     def enc_block(x, bp):
@@ -196,8 +197,8 @@ def prefill(params, cfg: ModelConfig, tokens, frames,
         self_cache = KvCache(k=k_p, v=v_p, pos=pos_p.astype(jnp.int32))
         x = x + attn_mod.attention(bp["self_attn"], h, cfg.attn, causal=True)
         h = _norm(cfg, bp["norm_x"], x)
-        ck = jnp.einsum("btd,dnh->btnh", memory, bp["cross_attn"]["wk"])
-        cv = jnp.einsum("btd,dnh->btnh", memory, bp["cross_attn"]["wv"])
+        ck = proj_heads(memory, bp["cross_attn"]["wk"])
+        cv = proj_heads(memory, bp["cross_attn"]["wv"])
         x = x + attn_mod.cross_attention(bp["cross_attn"], h, memory, cfg.attn)
         h = _norm(cfg, bp["norm2"], x)
         x = x + mlp(bp["mlp"], h, cfg)
@@ -233,7 +234,7 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, index):
 
 
 def _cached_cross_attention(params, x, cross: CrossKv, cfg: ModelConfig):
-    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    q = proj_heads(x, params["wq"])
     b, s = x.shape[0], x.shape[1]
     t = cross.k.shape[1]
     mask = jnp.ones((b, 1, 1, s, t), bool)

@@ -21,6 +21,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import kernels
 from repro.configs.base import BlockDef, ModelConfig
 from repro.nn import attention as attn_mod
 from repro.nn import kvquant
@@ -28,7 +29,6 @@ from repro.nn import moe as moe_mod
 from repro.nn import rglru as rglru_mod
 from repro.nn import ssd as ssd_mod
 from repro.nn.module import (
-    act_fn,
     dense,
     dense_spec,
     embed,
@@ -68,13 +68,15 @@ def mlp_spec(cfg: ModelConfig):
 
 
 def mlp(params, x, cfg: ModelConfig):
-    a = act_fn(cfg.act)
-    h = x @ params["w_in"]
+    """Dispatched MLP: the activation rides the matmul epilogue (one
+    fused kernel per projection on TPU instead of matmul + HBM round
+    trip + elementwise launch)."""
     if cfg.glu:
-        h = a(x @ params["w_gate"]) * h
+        h = kernels.linear(x, params["w_gate"], activation=cfg.act) \
+            * kernels.linear(x, params["w_in"])
     else:
-        h = a(h)
-    return h @ params["w_out"]
+        h = kernels.linear(x, params["w_in"], activation=cfg.act)
+    return kernels.linear(h, params["w_out"])
 
 
 def block_spec(cfg: ModelConfig, bd: BlockDef):
@@ -327,7 +329,9 @@ def _logits(params, cfg: ModelConfig, x):
     if cfg.tie_embeddings:
         out = unembed(params["embed"], x)
     else:
-        out = x.astype(jnp.float32) @ params["unembed"]["w"].astype(jnp.float32)
+        out = kernels.linear(
+            x.astype(jnp.float32), params["unembed"]["w"].astype(jnp.float32)
+        )
     return softcap(out, cfg.final_softcap)
 
 

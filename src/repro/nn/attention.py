@@ -21,12 +21,19 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import kernels
 from repro.configs.base import AttnConfig
 from repro.nn.memeff import memeff_attention
 from repro.nn.module import rope, softcap
 from repro.nn.spec import ParamSpec
 
 NEG_INF = -2.0**30  # large-negative in fp32; avoids bf16 overflow surprises
+
+
+def proj_heads(x, w, bias=None):
+    """Headed projection (..., d) @ (d, n, h) -> (..., n, h) through the
+    dispatched matmul (the old ``einsum("bsd,dnh->bsnh")`` sites)."""
+    return kernels.linear(x, w, bias=bias)
 
 
 def attn_spec(d_model: int, cfg: AttnConfig):
@@ -73,11 +80,9 @@ def init_cache(batch: int, slots: int, cfg: AttnConfig, dtype=jnp.bfloat16):
 
 
 def _qkv(params, x, cfg: AttnConfig, positions):
-    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
-    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
-    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
-    if cfg.qkv_bias:
-        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = proj_heads(x, params["wq"], params["bq"] if cfg.qkv_bias else None)
+    k = proj_heads(x, params["wk"], params["bk"] if cfg.qkv_bias else None)
+    v = proj_heads(x, params["wv"], params["bv"] if cfg.qkv_bias else None)
     if cfg.rope:
         q = rope(q, positions, theta=cfg.rope_theta)
         k = rope(k, positions, theta=cfg.rope_theta)
@@ -105,10 +110,11 @@ def _attend(q, k, v, mask, cfg: AttnConfig):
 
 
 def _proj_out(params, o, cfg: AttnConfig):
-    y = jnp.einsum("bsnh,nhd->bsd", o, params["wo"])
-    if cfg.out_bias:
-        y = y + params["bo"]
-    return y
+    # contracts (heads, head_dim) — the old einsum("bsnh,nhd->bsd")
+    return kernels.linear(
+        o, params["wo"], contract_dims=2,
+        bias=params["bo"] if cfg.out_bias else None,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -141,11 +147,9 @@ def attention(
 
 def cross_attention(params, x, kv_input, cfg: AttnConfig):
     """Encoder-decoder cross attention (no RoPE on either side)."""
-    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
-    k = jnp.einsum("btd,dnh->btnh", kv_input, params["wk"])
-    v = jnp.einsum("btd,dnh->btnh", kv_input, params["wv"])
-    if cfg.qkv_bias:
-        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = proj_heads(x, params["wq"], params["bq"] if cfg.qkv_bias else None)
+    k = proj_heads(kv_input, params["wk"], params["bk"] if cfg.qkv_bias else None)
+    v = proj_heads(kv_input, params["wv"], params["bv"] if cfg.qkv_bias else None)
     b, s = x.shape[0], x.shape[1]
     t = kv_input.shape[1]
     qp = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)

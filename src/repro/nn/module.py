@@ -3,12 +3,18 @@
 Functional style: ``*_spec()`` returns the parameter SpecTree, the apply
 function consumes the materialised (or abstract) params dict.  Compute
 dtype is bf16 by default; norms and softmax run in fp32.
+
+Every projection-shaped matmul routes through ``kernels.linear`` — the
+dispatched schedule fuses bias + activation into the kernel epilogue on
+TPU and falls back to the reference backend (the original XLA dot
+numerics) off-TPU.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro import kernels
 from repro.nn.spec import ParamSpec
 
 
@@ -24,11 +30,8 @@ def dense_spec(d_in: int, d_out: int, *, axes=("embed", "ff"), bias=False, scale
     return spec
 
 
-def dense(params, x):
-    y = x @ params["w"]
-    if "b" in params:
-        y = y + params["b"]
-    return y
+def dense(params, x, *, activation: str | None = None):
+    return kernels.linear(x, params["w"], bias=params.get("b"), activation=activation)
 
 
 # ---------------------------------------------------------------------------
@@ -80,7 +83,9 @@ def embed(params, tokens):
 
 def unembed(params, x):
     """Tied softmax head: logits in fp32."""
-    return x.astype(jnp.float32) @ params["table"].T.astype(jnp.float32)
+    return kernels.linear(
+        x.astype(jnp.float32), params["table"].T.astype(jnp.float32)
+    )
 
 
 def positional_embed_spec(max_len: int, d: int):
@@ -114,12 +119,10 @@ def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0) -> jax.A
 
 
 def act_fn(name: str):
-    return {
-        "gelu": jax.nn.gelu,
-        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
-        "silu": jax.nn.silu,
-        "relu": jax.nn.relu,
-    }[name]
+    # delegates to the kernel epilogue table: a fused activation (inside
+    # kernels.linear) and the same name applied out-of-kernel must be
+    # the same function, or glu/non-glu paths would silently diverge
+    return kernels.ACTIVATIONS[name]
 
 
 def softcap(x: jax.Array, cap: float | None) -> jax.Array:

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import kernels
 from repro.configs.base import MoeConfig
 from repro.nn.module import act_fn, softcap
 from repro.nn.spec import ParamSpec
@@ -85,7 +86,7 @@ def moe(params, x, cfg: MoeConfig, *, act: str = "silu", glu: bool = True):
     b, s, _ = x.shape
 
     # --- routing (fp32) ----------------------------------------------------
-    logits = x.astype(jnp.float32) @ params["router"]  # (b, s, e)
+    logits = kernels.linear(x.astype(jnp.float32), params["router"])  # (b, s, e)
     logits = softcap(logits, cfg.router_softcap)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (b, s, k)
@@ -125,15 +126,14 @@ def moe(params, x, cfg: MoeConfig, *, act: str = "silu", glu: bool = True):
     hidden = jnp.einsum("bjec,bjd->becd", dispatch, x_slots)
     hidden = _ep_constrain(hidden, (_DP, _EP, None, None))
 
-    # --- expert computation ---------------------------------------------------
+    # --- expert computation (dispatched grouped matmuls) ----------------------
     a = act_fn(act)
-    h_in = jnp.einsum("becd,edf->becf", hidden, params["w_in"])
+    h_in = kernels.grouped_linear(hidden, params["w_in"])
     if glu:
-        h_gate = jnp.einsum("becd,edf->becf", hidden, params["w_gate"])
-        h = a(h_gate) * h_in
+        h = kernels.grouped_linear(hidden, params["w_gate"], activation=act) * h_in
     else:
         h = a(h_in)
-    out = jnp.einsum("becf,efd->becd", h, params["w_out"])  # (b, e, cap, d)
+    out = kernels.grouped_linear(h, params["w_out"])  # (b, e, cap, d)
     out = _ep_constrain(out, (_DP, _EP, None, None))
 
     # --- combine ---------------------------------------------------------------
@@ -145,11 +145,11 @@ def moe(params, x, cfg: MoeConfig, *, act: str = "silu", glu: bool = True):
     # --- shared experts (always-on path) ----------------------------------------
     if "shared_in" in params:
         xf = x.reshape(b * s, d)
-        s_in = xf @ params["shared_in"]
+        s_in = kernels.linear(xf, params["shared_in"])
         if glu:
-            s_in = a(xf @ params["shared_gate"]) * s_in
+            s_in = kernels.linear(xf, params["shared_gate"], activation=act) * s_in
         else:
             s_in = a(s_in)
-        y = y + (s_in @ params["shared_out"]).reshape(b, s, d)
+        y = y + kernels.linear(s_in, params["shared_out"]).reshape(b, s, d)
 
     return y.reshape(b_orig, s_orig, d), aux_loss

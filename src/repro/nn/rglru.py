@@ -24,6 +24,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import kernels
 from repro.configs.base import RglruConfig
 from repro.nn.spec import ParamSpec
 
@@ -79,8 +80,11 @@ def _causal_depthwise_conv(x, w, b, prefix=None):
 
 
 def _gates(params, xb, cfg: RglruConfig):
-    r = jax.nn.sigmoid((xb @ params["w_a"]).astype(jnp.float32) + params["b_a"])
-    i = jax.nn.sigmoid((xb @ params["w_i"]).astype(jnp.float32) + params["b_i"])
+    # gate projections fuse bias + sigmoid into the kernel epilogue
+    r = kernels.linear(xb, params["w_a"], bias=params["b_a"],
+                       activation="sigmoid", out_dtype=jnp.float32)
+    i = kernels.linear(xb, params["w_i"], bias=params["b_i"],
+                       activation="sigmoid", out_dtype=jnp.float32)
     log_a = -cfg.c * jax.nn.softplus(params["lam"]) * r  # (b, s, d_rnn) fp32
     a = jnp.exp(log_a)
     gated_in = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * xb.astype(jnp.float32))
@@ -89,8 +93,8 @@ def _gates(params, xb, cfg: RglruConfig):
 
 def rglru(params, x, cfg: RglruConfig, *, state: RglruState | None = None):
     """Full-sequence Griffin block.  x: (b, s, d_model)."""
-    gate_branch = jax.nn.gelu(x @ params["w_gate_branch"])
-    xb = x @ params["w_x_branch"]
+    gate_branch = kernels.linear(x, params["w_gate_branch"], activation="gelu")
+    xb = kernels.linear(x, params["w_x_branch"])
     prefix = state.conv if state is not None else None
     xb, conv_tail = _causal_depthwise_conv(xb, params["conv_w"], params["conv_b"], prefix)
 
@@ -106,18 +110,18 @@ def rglru(params, x, cfg: RglruConfig, *, state: RglruState | None = None):
 
     _, h = jax.lax.associative_scan(combine, (a, gated_in), axis=1)
     new_state = RglruState(h=h[:, -1, :], conv=conv_tail)
-    y = (gate_branch * h.astype(x.dtype)) @ params["w_out"]
+    y = kernels.linear(gate_branch * h.astype(x.dtype), params["w_out"])
     return y, new_state
 
 
 def rglru_step(params, x, state: RglruState, cfg: RglruConfig):
     """Single-token decode step.  x: (b, 1, d_model)."""
-    gate_branch = jax.nn.gelu(x @ params["w_gate_branch"])
-    xb = x @ params["w_x_branch"]
+    gate_branch = kernels.linear(x, params["w_gate_branch"], activation="gelu")
+    xb = kernels.linear(x, params["w_x_branch"])
     xb, conv_tail = _causal_depthwise_conv(
         xb, params["conv_w"], params["conv_b"], state.conv
     )
     a, gated_in = _gates(params, xb, cfg)
     h = a[:, 0] * state.h + gated_in[:, 0]  # (b, d_rnn) fp32
-    y = (gate_branch[:, 0] * h.astype(x.dtype)) @ params["w_out"]
+    y = kernels.linear(gate_branch[:, 0] * h.astype(x.dtype), params["w_out"])
     return y[:, None, :], RglruState(h=h, conv=conv_tail)

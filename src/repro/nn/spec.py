@@ -12,6 +12,12 @@ From one spec we derive:
 
 Keeping all three derived from the same tree means the dry-run, the tests
 and the trainer can never disagree about a parameter's shape or layout.
+
+The *compute* side of the contract lives in ``repro.kernels``: apply
+functions consume these params through ``kernels.linear`` /
+``kernels.op(...)``, so the schedule a projection runs with (mcast /
+tiled / unicast / reference) is a dispatch decision, never encoded in
+the spec tree.
 """
 from __future__ import annotations
 

@@ -22,6 +22,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import kernels
 from repro.configs.base import SsmConfig
 from repro.nn.module import rmsnorm_spec
 from repro.nn.spec import ParamSpec
@@ -72,7 +73,7 @@ def init_ssd_state(batch: int, d_model: int, cfg: SsmConfig, dtype=jnp.bfloat16)
 
 def _split_proj(params, u, d_model, cfg: SsmConfig):
     d_inner, n_heads, _ = _dims(d_model, cfg)
-    proj = u @ params["in_proj"]
+    proj = kernels.linear(u, params["in_proj"])
     z, xs, b, c, dt = jnp.split(
         proj,
         [d_inner, 2 * d_inner, 2 * d_inner + cfg.d_state, 2 * d_inner + 2 * cfg.d_state],
@@ -190,7 +191,7 @@ def ssd(params, u, cfg: SsmConfig, *, state: SsdState | None = None):
         y = y[:, :s_real]  # z (below) is unpadded
 
     y = _gated_norm(params, y, z)
-    out = y @ params["out_proj"]
+    out = kernels.linear(y, params["out_proj"])
     return out, SsdState(h=h_last, conv=conv_tail)
 
 
@@ -216,4 +217,4 @@ def ssd_step(params, u, state: SsdState, cfg: SsmConfig):
     y = jnp.einsum("bhpn,bn->bhp", h, cf) + params["d_skip"][None, :, None] * x_h
     y = y.reshape(bsz, 1, d_inner).astype(u.dtype)
     y = _gated_norm(params, y, z)
-    return y @ params["out_proj"], SsdState(h=h, conv=conv_tail)
+    return kernels.linear(y, params["out_proj"]), SsdState(h=h, conv=conv_tail)

@@ -3,4 +3,16 @@
 IMPORTANT: do NOT set --xla_force_host_platform_device_count here — the
 dry-run owns that trick (512 devices), and smoke tests must see 1 device.
 Multi-device assertions run in subprocesses (see test_multidev.py).
+
+The autotuner's persistent cache is pointed at a per-session temp file
+(unless the caller already set REPRO_AUTOTUNE_CACHE) so test runs never
+read or pollute ~/.cache/repro/autotune.json — a stale on-disk winner
+would make cache-behaviour assertions order-dependent across runs.
 """
+import os
+import tempfile
+
+os.environ.setdefault(
+    "REPRO_AUTOTUNE_CACHE",
+    os.path.join(tempfile.mkdtemp(prefix="repro-autotune-"), "autotune.json"),
+)

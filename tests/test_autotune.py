@@ -1,5 +1,7 @@
 """The shared block-size autotuner: candidate generation, VMEM pruning,
-caching, and the measured-sweep path."""
+caching (in-memory + persistent), and the measured-sweep path."""
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -115,6 +117,85 @@ def test_sweep_skips_failing_candidates():
     assert cands[0] not in [c for c, _ in timed]
 
 
+def _simulate_restart():
+    """Drop process state but keep the disk file — what a new process sees."""
+    autotune._CACHE.clear()
+    autotune._DISK["loaded"] = False
+
+
+def test_disk_cache_roundtrip(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV_VAR, str(path))
+    cfg = autotune.best_config("matmul", (512, 256, 256), jnp.float32, schedule="tiled")
+    # cost-model entries batch; the explicit flush stands in for atexit
+    autotune.flush_disk_cache()
+    data = json.loads(path.read_text())
+    assert data["matmul|tiled|512x256x256|float32"] == cfg
+
+    _simulate_restart()
+    calls = []
+    got = autotune.best_config(
+        "matmul", (512, 256, 256), jnp.float32, schedule="tiled",
+        runner=lambda **c: calls.append(c),
+    )
+    # the persisted winner short-circuits the sweep entirely
+    assert got == cfg and not calls
+
+
+def test_disk_cache_persists_measured_sweeps(tmp_path, monkeypatch):
+    """The point of persistence (ROADMAP item 1): a measured sweep's
+    winner survives a process restart."""
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV_VAR, str(path))
+
+    def runner(**cfg):
+        pass
+
+    best = autotune.best_config(
+        "matmul", (512, 256, 256), jnp.float32, schedule="tiled",
+        runner=runner, max_trials=2,
+    )
+    _simulate_restart()
+    assert autotune.best_config(
+        "matmul", (512, 256, 256), jnp.float32, schedule="tiled"
+    ) == best
+
+
+def test_disk_cache_corrupt_file_is_ignored(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV_VAR, str(path))
+    path.write_text("{ not json")
+    cfg = autotune.best_config("matmul", (512, 256, 256), jnp.float32, schedule="tiled")
+    assert cfg  # degraded gracefully to a computed config...
+    autotune.flush_disk_cache()
+    _simulate_restart()
+    assert json.loads(path.read_text())  # ...and the rewrite healed the file
+
+
+def test_disk_cache_foreign_rows_survive_and_are_skipped(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV_VAR, str(path))
+    autotune.best_config("matmul", (512, 256, 256), jnp.float32, schedule="tiled")
+    autotune.flush_disk_cache()
+    data = json.loads(path.read_text())
+    data["not|a|real|key|at|all"] = {"bn": "garbage"}
+    path.write_text(json.dumps(data))
+    _simulate_restart()
+    # malformed row is skipped on load, valid rows still hit
+    cfg = autotune.best_config("matmul", (512, 256, 256), jnp.float32, schedule="tiled")
+    assert cfg == data["matmul|tiled|512x256x256|float32"]
+
+
+def test_clear_cache_disk_deletes_file(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV_VAR, str(path))
+    autotune.best_config("matmul", (512, 256, 256), jnp.float32, schedule="tiled")
+    autotune.flush_disk_cache()
+    assert path.exists()
+    autotune.clear_cache(disk=True)
+    assert not path.exists() and not autotune.cache_info()
+
+
 def test_autotuned_config_runs_correctly():
     """End-to-end: the config the tuner picks produces a correct matmul."""
     m, k, n = 512, 256, 384
@@ -125,3 +206,18 @@ def test_autotuned_config_runs_correctly():
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(matmul_ref(a, b)), rtol=2e-3, atol=2e-3
     )
+
+
+def test_disk_cache_old_format_is_ignored_and_rewritten(tmp_path, monkeypatch):
+    """A cache file from another code era (wrong/missing format version)
+    must not resurrect stale winners; the next save heals it."""
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV_VAR, str(path))
+    stale = {"matmul|tiled|512x256x256|float32": {"gm": 8, "bn": 8, "bk": 8}}
+    path.write_text(json.dumps(stale))  # no version field = pre-versioning era
+    cfg = autotune.best_config("matmul", (512, 256, 256), jnp.float32, schedule="tiled")
+    assert cfg != stale["matmul|tiled|512x256x256|float32"]  # recomputed
+    autotune.flush_disk_cache()
+    data = json.loads(path.read_text())
+    assert data[autotune._VERSION_KEY] == autotune.CACHE_FORMAT_VERSION
+    assert data["matmul|tiled|512x256x256|float32"] == cfg

@@ -1,0 +1,102 @@
+"""The CI kernel-benchmark regression gate (benchmarks/check_regression).
+
+The gate is relative: the machine-speed factor is estimated as the
+median per-kernel fresh/baseline ratio, and a kernel fails only when it
+got slower than that median by more than the threshold — raw
+microseconds never transfer between the baseline machine and CI.
+"""
+from benchmarks.check_regression import compare
+
+
+def _rows(**us):
+    return {name: {"us": t, "derived": ""} for name, t in us.items()}
+
+
+def test_common_mode_slowdown_passes():
+    """Everything 3x slower (slower machine / load): no kernel-specific
+    regression, the gate must stay green."""
+    fails, warns = compare(
+        _rows(kernel_a=100.0, kernel_b=50.0, kernel_c=10.0, fig3a_area=1.0),
+        _rows(kernel_a=300.0, kernel_b=150.0, kernel_c=30.0, fig3a_area=99.0),
+        min_us=0.0,
+    )
+    assert not fails and not warns  # non-kernel rows are ignored entirely
+
+
+def test_kernel_specific_regression_fails():
+    """One kernel doubling while its peers hold: fail that kernel only."""
+    fails, _ = compare(
+        _rows(kernel_a=100.0, kernel_b=100.0, kernel_c=50.0),
+        _rows(kernel_a=200.0, kernel_b=100.0, kernel_c=50.0),
+        min_us=0.0,
+    )
+    assert len(fails) == 1 and fails[0].startswith("kernel_a")
+    # the same shift under a generous threshold passes
+    fails, _ = compare(
+        _rows(kernel_a=100.0, kernel_b=100.0, kernel_c=50.0),
+        _rows(kernel_a=200.0, kernel_b=100.0, kernel_c=50.0),
+        threshold=1.5, min_us=0.0,
+    )
+    assert not fails
+
+
+def test_single_kernel_speedup_does_not_fail_the_others():
+    """A 10x speedup in one kernel must not make its unchanged peers
+    look regressed (the median absorbs the outlier)."""
+    fails, _ = compare(
+        _rows(kernel_a=1000.0, kernel_b=100.0, kernel_c=50.0),
+        _rows(kernel_a=100.0, kernel_b=100.0, kernel_c=50.0),
+        min_us=0.0,
+    )
+    assert not fails
+
+
+def test_missing_kernel_row_fails_and_new_row_warns():
+    fails, warns = compare(
+        _rows(kernel_gone=100.0, kernel_kept=100.0),
+        _rows(kernel_kept=100.0, kernel_new=10.0),
+        min_us=0.0,
+    )
+    assert len(fails) == 1 and "kernel_gone" in fails[0]
+    assert len(warns) == 1 and "kernel_new" in warns[0]
+
+
+def test_sub_floor_rows_are_advisory():
+    """Rows under the min-us floor in both runs warn instead of failing —
+    scheduler jitter alone exceeds 15% at that scale."""
+    fails, warns = compare(
+        _rows(kernel_tiny=100.0, kernel_big=50000.0, kernel_big2=80000.0),
+        _rows(kernel_tiny=300.0, kernel_big=50000.0, kernel_big2=80000.0),
+        min_us=1000.0,
+    )
+    assert not fails
+    assert len(warns) == 1 and "kernel_tiny" in warns[0] and "advisory" in warns[0]
+
+
+def test_advisory_rows_do_not_vote_in_the_median():
+    """A jittery sub-floor row must not shift the machine-factor median
+    and thereby mask a real regression in a gated row."""
+    fails, _ = compare(
+        _rows(kernel_tiny=100.0, kernel_a=50000.0, kernel_b=60000.0, kernel_c=80000.0),
+        # advisory row jitters 2x; gated kernel_c regresses 30% while
+        # a/b hold — if the advisory ratio voted, the even-count median
+        # would rise to 1.15 and kernel_c (rel 1.13) would slip through
+        _rows(kernel_tiny=200.0, kernel_a=50000.0, kernel_b=60000.0, kernel_c=104000.0),
+        min_us=1000.0,
+    )
+    assert len(fails) == 1 and fails[0].startswith("kernel_c")
+
+
+def test_broad_regression_triggers_anchor_advisory():
+    """All pallas rows 40% slower while the reference anchor holds: the
+    median gate is structurally blind to it, but the anchor cross-check
+    must at least warn."""
+    fails, warns = compare(
+        _rows(kernel_a=50000.0, kernel_b=60000.0, kernel_c=80000.0,
+              kernel_linear_dispatch=20000.0),
+        _rows(kernel_a=70000.0, kernel_b=84000.0, kernel_c=112000.0,
+              kernel_linear_dispatch=20000.0),
+        min_us=1000.0,
+    )
+    assert not fails  # the blind spot, by design
+    assert any("suite-wide" in w for w in warns)
