@@ -7,6 +7,12 @@ the pallas rows force ``policy="pallas"``/a schedule name, and the
 resolves to the reference backend, which is exactly what the nn layer
 executes in CI.  The derived column records what dispatch picked.
 
+The ``*_bwd`` rows time ``jax.grad`` through the same dispatched calls
+(forward + the custom-VJP backward kernels, jitted as one program) —
+the training-throughput side of the >15% regression gate.  The
+``kernel_linear_dispatch_bwd`` row is the reference-backend anchor for
+the gate's suite-wide cross-check, mirroring its forward sibling.
+
 Timing protocol, tuned for the regression gate in
 ``benchmarks/check_regression.py``:
 
@@ -56,9 +62,38 @@ def run() -> list[str]:
 
     # the nn layer's actual CI path: default policy -> reference backend,
     # under jit like every model forward that calls kernels.linear
-    sched, backend, _ = kernels.resolve("matmul", (4096, 512, 512), jnp.float32)
+    sched, backend, _, _ = kernels.resolve("matmul", (4096, 512, 512), jnp.float32)
     bias = jax.random.normal(k, (512,), jnp.float32)
     lin = jax.jit(lambda u: kernels.linear(u, bb, bias=bias, activation="silu"))
+
+    # backward rows: value_and_grad through the dispatched call — one
+    # jitted program covering forward + the custom-VJP backward kernels.
+    # Backward shapes are scaled down from the forward rows (interpret
+    # mode roughly triples the work per call) but stay above the gate's
+    # 5ms floor.
+    def _gradded(fn, *args):
+        g = jax.jit(jax.grad(lambda *xs: fn(*xs).astype(jnp.float32).sum(),
+                             argnums=tuple(range(len(args)))))
+        return lambda: g(*args)[0]
+
+    aa2 = jax.random.normal(k, (2048, 512), jnp.float32)
+    mm_bwd = _gradded(
+        lambda u, w: kernels.linear(u, w, bias=bias, activation="silu",
+                                    policy="tiled"),
+        aa2, bb,
+    )
+    fa_bwd = _gradded(lambda q_, k_, v_: flash(q_, k_, v_, policy="pallas"),
+                      q, kv, kv)
+    xdt2, log_a2 = xdt[:, :, :512], log_a[:, :, :512]
+    bm2 = bm[:, :512]
+    ssd_bwd = _gradded(
+        lambda x_, b_, c_, l_: ssd(x_, b_, c_, l_, policy="pallas"),
+        xdt2, bm2, bm2, log_a2,
+    )
+    lru_bwd = _gradded(lambda a_, x_: lru(a_, x_, policy="pallas"), a, x)
+    lin_bwd = _gradded(
+        lambda u, w: kernels.linear(u, w, bias=bias, activation="silu"), aa2, bb
+    )
 
     bench = [
         ("kernel_flash_attn", lambda: flash(q, kv, kv, policy="pallas"),
@@ -71,6 +106,16 @@ def run() -> list[str]:
          f"supertile M4096 K512 N512 cfg={mm_cfg}"),
         ("kernel_linear_dispatch", lambda: lin(aa),
          f"default policy -> {sched}/{backend} M4096 K512 N512 fused bias+silu"),
+        ("kernel_matmul_tiled_bwd", mm_bwd,
+         "grad(linear) tiled M2048 K512 N512 fused bias+silu (fwd+dZ+dA+dB)"),
+        ("kernel_flash_attention_bwd", fa_bwd,
+         "grad(flash) GQA 4q/2kv s512 d64 (fwd+lse, dq, dkv kernels)"),
+        ("kernel_ssd_bwd", ssd_bwd,
+         "grad(ssd) h4 s512 P64 N64 (fwd+states, reverse-chunk kernel)"),
+        ("kernel_rglru_bwd", lru_bwd,
+         "grad(rglru) s512 d512 (fwd, reverse-scan kernel); advisory"),
+        ("kernel_linear_dispatch_bwd", lin_bwd,
+         "grad(linear) default policy reference anchor M2048 K512 N512"),
     ]
 
     for _, fn, _ in bench:

@@ -20,6 +20,11 @@ regression in a PR looks like.
   PYTHONPATH=src python -m benchmarks.check_regression \
       --baseline BENCH_kernels.json --fresh BENCH_fresh.json [--threshold 0.15]
 
+Both directions are gated: the ``kernel_*_bwd`` rows time ``jax.grad``
+through the dispatched kernels (the custom-VJP backward kernels), so a
+regression in a backward schedule — training throughput — fails CI
+exactly like a forward one.
+
 Non-kernel rows (fig3a_* area/timing model numbers etc.) are derived
 analytically and tracked by tests, not by this timing gate.
 """
@@ -31,6 +36,10 @@ import statistics
 import sys
 
 KERNEL_PREFIX = "kernel_"
+# reference-backend rows anchoring the suite-wide cross-check (one per
+# direction — a broad backward-only regression should not hide behind a
+# healthy forward anchor)
+ANCHOR_ROWS = ("kernel_linear_dispatch", "kernel_linear_dispatch_bwd")
 
 
 def compare(
@@ -63,17 +72,22 @@ def compare(
 
     # Known blind spot of relative gating: a regression hitting >= half
     # the gated rows is absorbed into the median as "slower machine".
-    # The reference-backed dispatch row anchors a cross-check — pallas
-    # rows collectively drifting past it is suspicious even when the
-    # per-row gate stays green.  Advisory, not failing: absolute
-    # cross-machine gating is unreliable by construction.
-    ref_ratio = ratios.get("kernel_linear_dispatch")
-    if ref_ratio and machine / ref_ratio > 1.0 + threshold:
-        warnings_.append(
-            f"suite-wide: gated kernels are {(machine / ref_ratio - 1) * 100:.0f}% "
-            f"slower relative to the reference-backend anchor row — possible "
-            f"broad kernel/dispatch regression the per-row gate cannot see"
-        )
+    # The reference-backend dispatch rows (fwd + bwd) anchor a
+    # cross-check — pallas rows collectively drifting past them is
+    # suspicious even when the per-row gate stays green.  Advisory, not
+    # failing: absolute cross-machine gating is unreliable by
+    # construction.
+    anchor_ratios = [ratios[k] for k in ANCHOR_ROWS if k in ratios]
+    if anchor_ratios:
+        ref_ratio = statistics.median(anchor_ratios)
+        if ref_ratio > 0 and machine / ref_ratio > 1.0 + threshold:
+            warnings_.append(
+                f"suite-wide: gated kernels are "
+                f"{(machine / ref_ratio - 1) * 100:.0f}% slower relative to the "
+                f"reference-backend anchor rows ({len(anchor_ratios)} anchors) — "
+                f"possible broad kernel/dispatch regression the per-row gate "
+                f"cannot see"
+            )
 
     for name, base_us in sorted(base_rows.items()):
         if name not in fresh_rows:

@@ -60,7 +60,7 @@ print("Pallas multicast-schedule matmul matches the jnp oracle ✓")
 from repro.kernels import autotune
 from repro.kernels.matmul.matmul import hbm_traffic_model
 
-sched, backend, _ = kernels.resolve("matmul", (65536, 2048, 2048), jnp.float32,
+sched, backend, _, _ = kernels.resolve("matmul", (65536, 2048, 2048), jnp.float32,
                                     policy="pallas")
 assert sched == "tiled", "mcast's VMEM predicate must exclude M=65536"
 print(f"dispatch(M=65536, pallas) -> {sched}/{backend} (mcast panel > VMEM)")

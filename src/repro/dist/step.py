@@ -23,7 +23,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import kernels
 from repro.configs.shapes import SHAPES, input_specs
 from repro.dist import sharding as shd
 from repro.dist.compression import compress_grads, init_error_state
@@ -94,17 +93,11 @@ def build_train_step(
             params, cfg, batch["tokens"], batch["labels"], loss_chunk=loss_chunk, **kw
         )
 
-    def loss_of(params, batch):
-        # every grad path differentiates this function, so the no-VJP
-        # guard lives here: the pallas kernels define no custom VJPs yet,
-        # and when dispatch would default to them (TPU, no explicit
-        # policy) training must trace the reference backend instead.  An
-        # explicit set_policy / REPRO_KERNEL_POLICY / --kernel-policy is
-        # honored as an opt-in override.
-        if kernels.policy_is_default() and jax.default_backend() == "tpu":
-            with kernels.use_policy("reference"):
-                return _loss_impl(params, batch)
-        return _loss_impl(params, batch)
+    # every pallas schedule carries a custom VJP (repro.kernels.api), so
+    # the grad trace dispatches the fused kernels directly — the old
+    # reference-backend pin for training is gone; on TPU the backward
+    # matmuls ride the same supertile schedules as the forward
+    loss_of = _loss_impl
 
     if compress_pod_grads:
 

@@ -13,13 +13,13 @@ from repro.kernels.api import (  # noqa: F401
     DispatchPolicy,
     KernelOp,
     Problem,
+    Resolution,
     Schedule,
     get_policy,
     grouped_linear,
     linear,
     op,
     ops,
-    policy_is_default,
     register,
     resolve,
     set_policy,

@@ -37,6 +37,20 @@ every model projection through the interpreter would be pathologically
 slow).  Block sizes come from the shared autotuner unless the policy
 disables it or the caller pins them via ``blocks=``.
 
+Every pallas schedule also carries a **custom VJP** (``Schedule.vjp``),
+so ``jax.grad`` through any registry op runs pallas kernels both ways:
+matmul backward re-enters dispatch as two more registry matmuls
+(dA = g.B^T, dB = A^T.g — the supertile schedules and the autotuner
+serve the backward for free), flash-attention backward is the
+recompute-based FlashAttention-2 pair of kernels, and ssd/rglru reverse
+their scans with the adjoint state carried in VMEM.  Dispatch is
+differentiation-aware: under ``jax.grad`` a schedule without a VJP is
+auto-excluded (never silently hit), and *forcing* one raises instead of
+tracing into an undifferentiable ``pallas_call``.  Only reverse-mode AD
+is supported through the pallas backends (``custom_vjp`` functions
+cannot be jvp'd, and a raw ``pallas_call`` never could) — use the
+reference backend for ``jax.jvp``/``jax.linearize``/forward-over-reverse.
+
 Public surface:
 
 * :func:`linear` — ``act(x @ w + bias)`` for every projection-shaped
@@ -45,7 +59,8 @@ Public surface:
 * :func:`grouped_linear` — the per-expert (grouped) form used by MoE,
 * :func:`op` — ``op("flash_attention")(q, k, v, causal=...)`` etc.,
 * :func:`resolve` — introspection: which schedule/backend/config a call
-  would pick (used by tests and benchmarks).
+  would pick and whether it is differentiable (used by tests and
+  benchmarks).
 """
 from __future__ import annotations
 
@@ -55,13 +70,18 @@ import functools
 import math
 import os
 import warnings
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.interpreters import ad as _ad
 
 from repro.kernels import autotune
-from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention,
+    flash_attention_bwd_dkv,
+    flash_attention_bwd_dq,
+)
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.matmul.matmul import (
     _ACTIVATIONS,
@@ -70,9 +90,9 @@ from repro.kernels.matmul.matmul import (
     matmul_unicast,
 )
 from repro.kernels.rglru.ref import rglru_scan_ref
-from repro.kernels.rglru.rglru import rglru_scan
+from repro.kernels.rglru.rglru import rglru_scan, rglru_scan_bwd
 from repro.kernels.ssd.ref import ssd_scan_ref
-from repro.kernels.ssd.ssd import ssd_scan
+from repro.kernels.ssd.ssd import ssd_scan, ssd_scan_bwd
 
 POLICY_ENV_VAR = "REPRO_KERNEL_POLICY"
 BACKENDS = ("pallas", "reference")
@@ -163,13 +183,25 @@ def get_policy() -> DispatchPolicy:
     return DispatchPolicy()
 
 
-def policy_is_default() -> bool:
-    """True when no global policy is in force (neither :func:`set_policy`
-    nor ``REPRO_KERNEL_POLICY``) — i.e. dispatch would run its platform
-    default.  Gradient-taking callers use this to decide whether to pin
-    the reference backend (the pallas kernels define no custom VJPs yet)
-    without overriding an explicit user choice."""
-    return _GLOBAL_POLICY is None and not os.environ.get(POLICY_ENV_VAR)
+def _needs_vjp(*arrays) -> bool:
+    """True when any input is being differentiated (a ``JVPTracer``
+    somewhere in its tracer ancestry — grad/vjp/linearize, possibly
+    under jit/vmap).  Dispatch uses this to exclude schedules without a
+    VJP *before* tracing into an undifferentiable ``pallas_call``, the
+    same way availability predicates exclude VMEM-overflowing schedules.
+    Plain jit/vmap tracing is not differentiation and returns False."""
+    seen: set[int] = set()
+    stack = [x for x in arrays if isinstance(x, jax.core.Tracer)]
+    while stack:
+        t = stack.pop()
+        if isinstance(t, _ad.JVPTracer):
+            return True
+        for attr in ("val", "primal", "tangent"):  # batching etc. wrappers
+            v = getattr(t, attr, None)
+            if isinstance(v, jax.core.Tracer) and id(v) not in seen:
+                seen.add(id(v))
+                stack.append(v)
+    return False
 
 
 @contextlib.contextmanager
@@ -212,6 +244,11 @@ class Schedule:
     available: Callable[[Problem], bool] = lambda p: True
     cost: Callable[[Problem], float] | None = None  # lower wins; None = last resort
     autotune_schedule: str | None = None  # schedule key for autotune.best_config
+    # VJP capability: reference schedules differentiate natively (pure
+    # jnp), pallas schedules only if wired into the custom-VJP table
+    # below.  Under differentiation, dispatch auto-excludes vjp=False
+    # schedules and refuses to force one.
+    vjp: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,9 +278,19 @@ class KernelOp:
         return out
 
     def resolve(
-        self, problem: Problem, policy: DispatchPolicy | str | None = None
+        self,
+        problem: Problem,
+        policy: DispatchPolicy | str | None = None,
+        *,
+        needs_vjp: bool = False,
     ) -> tuple[Schedule, dict[str, int]]:
-        """Pick (schedule, block config) for a problem under a policy."""
+        """Pick (schedule, block config) for a problem under a policy.
+
+        ``needs_vjp`` marks a call under differentiation: schedules
+        without a VJP are excluded from auto-dispatch, and forcing one
+        (by schedule name or backend) raises instead of letting jax die
+        deep inside an undifferentiable ``pallas_call``.
+        """
         pol = as_policy(policy) or get_policy()
         if pol.schedule is not None:
             sched = self.schedule(pol.schedule)
@@ -252,9 +299,24 @@ class KernelOp:
                     f"policy forces schedule {pol.schedule!r} (backend "
                     f"{sched.backend}) but also backend {pol.backend!r}"
                 )
+            if needs_vjp and not sched.vjp:
+                raise ValueError(
+                    f"kernel op {self.name!r}: schedule {sched.name!r} has no "
+                    f"VJP but the call is being differentiated (jax.grad / "
+                    f"jax.vjp); force a vjp-capable schedule "
+                    f"({[s.name for s in self.schedules if s.vjp]}) or drop "
+                    f"the forced policy and let dispatch pick one"
+                )
         else:
             backend = pol.backend or ("pallas" if not _interpret() else "reference")
             of_backend = [s for s in self.schedules if s.backend == backend]
+            if needs_vjp:
+                of_backend = [s for s in of_backend if s.vjp]
+                if not of_backend and pol.backend is not None:
+                    raise ValueError(
+                        f"kernel op {self.name!r}: no {pol.backend!r} schedule "
+                        f"has a VJP but the call is being differentiated"
+                    )
             avail = [s for s in of_backend if s.available(problem)]
             if pol.backend is not None:
                 # an explicitly forced backend is honored even when every
@@ -263,7 +325,10 @@ class KernelOp:
                 # make "force pallas" benchmarks measure XLA numbers
                 avail = avail or of_backend
             elif not avail:  # default backend doesn't fit -> reference
-                avail = [s for s in self.schedules if s.backend == "reference"]
+                avail = [
+                    s for s in self.schedules
+                    if s.backend == "reference" and (s.vjp or not needs_vjp)
+                ]
             sched = min(
                 avail, key=lambda s: s.cost(problem) if s.cost else math.inf
             )
@@ -284,8 +349,9 @@ class KernelOp:
     ) -> jax.Array:
         opts = self._normalize_opts(opts)
         problem = Problem(tuple(self.problem(*arrays)), jnp.dtype(arrays[0].dtype).name)
-        sched, cfg = self.resolve(problem, policy)
-        return _invoke(self.name, sched, arrays, cfg, blocks, opts)
+        pol = as_policy(policy) or get_policy()
+        sched, cfg = self.resolve(problem, pol, needs_vjp=_needs_vjp(*arrays))
+        return _invoke(self.name, sched, arrays, cfg, blocks, opts, pol)
 
 
 _REGISTRY: dict[str, KernelOp] = {}
@@ -310,18 +376,48 @@ def ops() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+class Resolution(NamedTuple):
+    """What :func:`resolve` reports: the picked schedule/backend/config
+    plus whether that schedule can be differentiated (``vjp``)."""
+
+    schedule: str
+    backend: str
+    cfg: dict[str, int]
+    vjp: bool
+
+
 def resolve(
     name: str,
     shape: Sequence[int],
     dtype,
     policy: DispatchPolicy | str | None = None,
-) -> tuple[str, str, dict[str, int]]:
+    *,
+    needs_vjp: bool = False,
+) -> Resolution:
     """Which (schedule, backend, block config) a call would dispatch to —
-    introspection for tests, benchmarks and docs; runs nothing."""
+    introspection for tests, benchmarks and docs; runs nothing.  Pass
+    ``needs_vjp=True`` to see what a differentiated call would pick."""
     sched, cfg = op(name).resolve(
-        Problem(tuple(int(s) for s in shape), jnp.dtype(dtype).name), policy
+        Problem(tuple(int(s) for s in shape), jnp.dtype(dtype).name),
+        policy, needs_vjp=needs_vjp,
     )
-    return sched.name, sched.backend, cfg
+    return Resolution(sched.name, sched.backend, cfg, sched.vjp)
+
+
+def _bwd_policy_token(pol: DispatchPolicy) -> str | None:
+    """How the backward pass re-dispatches, derived from the forward
+    policy.  A per-call forced schedule must not leak to the backward
+    problems (dA/dB have different shapes — a forced flat ``mcast``
+    could overflow VMEM backward), so forcing pallas in any form pins
+    the backward to the cheapest-available *pallas* schedule; otherwise
+    the backward resolves under the ambient policy at its own trace
+    time (global policy / env var / platform default), which is what
+    produced a pallas forward in the first place."""
+    if pol.schedule is not None or pol.backend == "pallas":
+        return "backend=pallas" + ("" if pol.autotune else ",autotune=off")
+    if not pol.autotune:
+        return "autotune=off"
+    return None
 
 
 def _invoke(
@@ -331,32 +427,257 @@ def _invoke(
     cfg: dict[str, int],
     blocks: dict[str, int] | None,
     opts: dict,
+    pol: DispatchPolicy | None = None,
 ) -> jax.Array:
-    """Shared dispatch tail (explicit-block merge + jit trampoline) for
-    ``KernelOp.__call__`` and ``linear``'s pallas branch."""
+    """Shared dispatch tail (explicit-block merge + custom-VJP wrap +
+    jit trampoline) for ``KernelOp.__call__`` and ``linear``'s pallas
+    branch."""
     if blocks:
         cfg = dict(cfg, **{k: v for k, v in blocks.items() if v is not None})
     if sched.backend == "reference":
         cfg = {}  # block choices are meaningless for the oracle
-    return _run(
-        *arrays,
-        op_name=op_name,
-        schedule=sched.name,
-        cfg=tuple(sorted(cfg.items())),
-        opts=tuple(sorted(opts.items())),
-        interpret=_interpret(),
+    static = (
+        op_name,
+        sched.name,
+        tuple(sorted(cfg.items())),
+        tuple(sorted(opts.items())),
+        _interpret(),
+        _bwd_policy_token(pol or get_policy()),
     )
+    if sched.backend == "pallas":
+        # the custom_vjp wrappers are free when nothing differentiates
+        # (jax runs the primal below); under jax.grad a vjp-capable
+        # schedule routes to the family's backward kernels, and a
+        # vjp-less one raises the same clear error resolve() gives —
+        # this backstop matters under grad(jit(...)), where the inner
+        # jit traces first and _needs_vjp cannot see the later
+        # differentiation of the jaxpr
+        return (_vjp_call if sched.vjp else _no_vjp_call)(static, *arrays)
+    return _run(*arrays, static=static)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("op_name", "schedule", "cfg", "opts", "interpret")
-)
-def _run(*arrays, op_name, schedule, cfg, opts, interpret):
+@functools.partial(jax.jit, static_argnames=("static",))
+def _run(*arrays, static):
     """Single jit'd trampoline for every dispatch — one compile cache per
     (op, schedule, shapes, config, options) so eager callers (tests,
     benchmarks, the deprecated wrappers) pay tracing once per key."""
+    op_name, schedule, cfg, opts, interpret, _ = static
     sched = _REGISTRY[op_name].schedule(schedule)
     return sched.fn(*arrays, cfg=dict(cfg), opts=dict(opts), interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# custom VJPs — pallas kernels both ways
+# ---------------------------------------------------------------------------
+#
+# One jax.custom_vjp wrapper serves every pallas schedule; the static
+# tuple (op, schedule, cfg, opts, interpret, bwd-policy) selects the
+# family's forward-with-residuals and backward implementations from the
+# tables below.  The primal path is byte-identical to the plain
+# dispatch (_run), so wrapping costs nothing when not differentiating.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _vjp_call(static, *arrays):
+    return _run(*arrays, static=static)
+
+
+def _vjp_fwd(static, *arrays):
+    return _VJP_FWD[static[0]](static, *arrays)
+
+
+def _vjp_bwd(static, residuals, g):
+    return _VJP_BWD[static[0]](static, residuals, g)
+
+
+_vjp_call.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _no_vjp_call(static, *arrays):
+    return _run(*arrays, static=static)
+
+
+def _no_vjp_bwd(static, residuals, g):
+    op_name, schedule = static[0], static[1]
+    raise ValueError(
+        f"kernel op {op_name!r}: schedule {schedule!r} has no VJP but its "
+        f"output is being differentiated (jax.grad / jax.vjp); force a "
+        f"vjp-capable schedule or let dispatch pick one"
+    )
+
+
+_no_vjp_call.defvjp(lambda static, *arrays: (_no_vjp_call(static, *arrays), ()),
+                    _no_vjp_bwd)
+
+
+def _bwd_blocks(kernel: str, shape, dtype, static, fwd_cfg: dict) -> dict:
+    """Backward block config: direction-keyed autotune pick, unless the
+    forward policy disabled autotuning (then the forward blocks, which
+    at least divide the sequence extents, are reused)."""
+    token = static[5]
+    if token is not None and "autotune=off" in token:
+        return dict(fwd_cfg)
+    return autotune.best_config(kernel, shape, dtype, direction="bwd")
+
+
+# -- matmul: backward re-enters dispatch as two more registry matmuls ------
+
+
+def _matmul_vjp_fwd(static, a, b, *maybe_bias):
+    return _run(a, b, *maybe_bias, static=static), (a, b, *maybe_bias)
+
+
+def _matmul_vjp_bwd(static, res, g):
+    a, b, *maybe_bias = res
+    bias = maybe_bias[0] if maybe_bias else None
+    opts = dict(static[3])
+    pol = static[5]  # bwd dispatch policy token (None = ambient)
+    g32 = g.astype(jnp.float32)
+    if opts["activation"] != "none":
+        # recompute the pre-activation z (one dispatched matmul) — the
+        # FlashAttention trade: one extra pass instead of an (M, N)
+        # fp32 residual written to HBM on every forward
+        z = linear(a, b, out_dtype=jnp.float32, policy=pol)
+        if bias is not None:
+            z = z + bias.astype(jnp.float32)
+        _, act_vjp = jax.vjp(_ACTIVATIONS[opts["activation"]], z)
+        dz = act_vjp(g32)[0]
+    else:
+        dz = g32
+    grads = (
+        linear(dz.astype(a.dtype), b.T, policy=pol).astype(a.dtype),  # g.B^T
+        linear(a.T, dz.astype(a.dtype), policy=pol).astype(b.dtype),  # A^T.g
+    )
+    if bias is not None:
+        grads += (dz.sum(axis=0).astype(bias.dtype),)
+    return grads
+
+
+# -- flash attention: FlashAttention-2 recompute backward ------------------
+
+
+def _flash_vjp_fwd(static, q, k, v):
+    _, _, cfg, opts, interpret, _ = static
+    opts = dict(opts)
+    o, lse = flash_attention(
+        q, k, v, causal=opts["causal"], window=opts["window"],
+        softcap=opts["softcap"], **dict(cfg), return_lse=True,
+        interpret=interpret,
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _flash_vjp_bwd(static, res, g):
+    _, _, cfg, opts, interpret, _ = static
+    opts = dict(opts)
+    q, k, v, o, lse = res
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    blocks = _bwd_blocks(
+        "flash_attention", (b, h, sq, sk, d), q.dtype, static, dict(cfg)
+    )
+    kw = dict(
+        causal=opts["causal"], window=opts["window"], softcap=opts["softcap"],
+        **blocks, interpret=interpret,
+    )
+    delta = jnp.sum(g.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    dq = flash_attention_bwd_dq(q, k, v, g, lse, delta, **kw)
+    dk, dv = flash_attention_bwd_dkv(q, k, v, g, lse, delta, **kw)
+    if h != kvh:  # GQA: per-query-head gradients sum onto the kv heads
+        group = h // kvh
+        dk = dk.reshape(b, kvh, group, sk, d).sum(axis=2)
+        dv = dv.reshape(b, kvh, group, sk, d).sum(axis=2)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+# -- ssd: reverse-chunk adjoint scan ----------------------------------------
+
+
+def _ssd_chunk(cfg: dict, s: int) -> int:
+    """The kernel asserts chunk | s: autotuned pick, else the largest
+    divisor <= 128 (shared by forward dispatch and the VJP)."""
+    return cfg.get("chunk") or max(
+        d for d in range(1, min(128, s) + 1) if s % d == 0
+    )
+
+
+def _ssd_lcum(log_a, chunk: int):
+    bsz, h, s = log_a.shape
+    lc = log_a.reshape(bsz, h, s // chunk, chunk)
+    return jnp.cumsum(lc, axis=-1).reshape(bsz, h, s, 1)
+
+
+def _ssd_vjp_fwd(static, xdt, b, c, log_a):
+    _, _, cfg, _, interpret, _ = static
+    chunk = _ssd_chunk(dict(cfg), log_a.shape[-1])
+    lcum = _ssd_lcum(log_a, chunk)
+    y, states = ssd_scan(
+        xdt, b, c, lcum, chunk=chunk, return_states=True, interpret=interpret
+    )
+    return y, (xdt, b, c, log_a, states)
+
+
+def _ssd_vjp_bwd(static, res, g):
+    _, _, cfg, _, interpret, _ = static
+    xdt, b, c, log_a, states = res
+    s = log_a.shape[-1]
+    fwd_chunk = _ssd_chunk(dict(cfg), s)
+    # the checkpointed states are one per *forward* chunk, so the
+    # backward kernel must walk the same chunk grid — direction-keyed
+    # autotune applies to the other families, whose residuals are
+    # chunk-agnostic
+    lcum = _ssd_lcum(log_a, fwd_chunk)
+    dx, db_h, dc_h, dl = ssd_scan_bwd(
+        xdt.astype(jnp.float32), b.astype(jnp.float32), c.astype(jnp.float32),
+        lcum, states, g.astype(jnp.float32),
+        chunk=fwd_chunk, interpret=interpret,
+    )
+    return (
+        dx.astype(xdt.dtype),
+        db_h.sum(axis=1).astype(b.dtype),  # B/C are head-shared
+        dc_h.sum(axis=1).astype(c.dtype),
+        dl[..., 0].astype(log_a.dtype),
+    )
+
+
+# -- rglru: reverse linear scan ---------------------------------------------
+
+
+def _rglru_vjp_fwd(static, a, b):
+    _, _, cfg, _, interpret, _ = static
+    h = rglru_scan(a, b, **dict(cfg), interpret=interpret)
+    return h, (a, h)
+
+
+def _rglru_vjp_bwd(static, res, g):
+    _, _, cfg, _, interpret, _ = static
+    a, h = res
+    blocks = _bwd_blocks("rglru", a.shape, jnp.float32, static, dict(cfg))
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1
+    )
+    da, db = rglru_scan_bwd(
+        a.astype(jnp.float32), h_prev, g.astype(jnp.float32),
+        **blocks, interpret=interpret,
+    )
+    # the kernel streams a and b as one fp32 recurrence; their
+    # cotangents come back in the (shared) input dtype
+    return da.astype(a.dtype), db.astype(a.dtype)
+
+
+_VJP_FWD = {
+    "matmul": _matmul_vjp_fwd,
+    "flash_attention": _flash_vjp_fwd,
+    "ssd": _ssd_vjp_fwd,
+    "rglru": _rglru_vjp_fwd,
+}
+_VJP_BWD = {
+    "matmul": _matmul_vjp_bwd,
+    "flash_attention": _flash_vjp_bwd,
+    "ssd": _ssd_vjp_bwd,
+    "rglru": _rglru_vjp_bwd,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -443,13 +764,16 @@ register(KernelOp(
     opt_defaults=(("activation", "none"), ("out_dtype", None)),
     schedules=(
         Schedule("tiled", "pallas", _mm_tiled,
-                 cost=_model_cost("matmul", "tiled"), autotune_schedule="tiled"),
+                 cost=_model_cost("matmul", "tiled"), autotune_schedule="tiled",
+                 vjp=True),
         Schedule("mcast", "pallas", _mm_flat(matmul_mcast),
                  available=_fits_vmem("matmul", "mcast"),
-                 cost=_model_cost("matmul", "mcast"), autotune_schedule="mcast"),
+                 cost=_model_cost("matmul", "mcast"), autotune_schedule="mcast",
+                 vjp=True),
         Schedule("unicast", "pallas", _mm_flat(matmul_unicast),
-                 cost=_model_cost("matmul", "unicast"), autotune_schedule="unicast"),
-        Schedule("reference", "reference", _mm_reference),
+                 cost=_model_cost("matmul", "unicast"), autotune_schedule="unicast",
+                 vjp=True),
+        Schedule("reference", "reference", _mm_reference, vjp=True),
     ),
 ))
 
@@ -491,7 +815,11 @@ def linear(
     opts = {"activation": activation or "none", "out_dtype": out_name}
 
     mm = op("matmul")
-    sched, cfg = mm.resolve(Problem((m, k, n), jnp.dtype(x.dtype).name), policy)
+    pol = as_policy(policy) or get_policy()
+    sched, cfg = mm.resolve(
+        Problem((m, k, n), jnp.dtype(x.dtype).name), pol,
+        needs_vjp=_needs_vjp(x, w, bias),
+    )
     if sched.backend == "reference":
         # contracting dims listed high-to-low: einsum's canonical order,
         # so this lowers bit-identically to the einsum/@ sites it replaced
@@ -505,7 +833,7 @@ def linear(
     arrays = (x.reshape(m, k), w.reshape(k, n))
     if bias is not None:
         arrays += (bias.reshape(n),)
-    y = _invoke("matmul", sched, arrays, cfg, blocks, opts)
+    y = _invoke("matmul", sched, arrays, cfg, blocks, opts, pol)
     return y.reshape(*lead, *out_dims)
 
 
@@ -527,7 +855,9 @@ def grouped_linear(
     lead = x.shape[:-3]
     m = x.shape[-2]
     m_eff = max(1, math.prod(lead)) * m
-    sched_name, backend, _ = resolve("matmul", (m_eff, k, n), x.dtype, policy)
+    _, backend, _, _ = resolve(
+        "matmul", (m_eff, k, n), x.dtype, policy, needs_vjp=_needs_vjp(x, w)
+    )
     if backend == "reference":
         y = jnp.einsum("...gmk,gkn->...gmn", x, w)
         if activation is not None:
@@ -569,8 +899,9 @@ register(KernelOp(
     schedules=(
         Schedule("pallas", "pallas", _flash_pallas,
                  available=_fits_vmem("flash_attention"),
-                 cost=_model_cost("flash_attention"), autotune_schedule="default"),
-        Schedule("reference", "reference", _flash_reference),
+                 cost=_model_cost("flash_attention"), autotune_schedule="default",
+                 vjp=True),
+        Schedule("reference", "reference", _flash_reference, vjp=True),
     ),
 ))
 
@@ -581,11 +912,8 @@ register(KernelOp(
 
 
 def _ssd_pallas(xdt, b, c, log_a, *, cfg, opts, interpret):
-    bsz, h, s = log_a.shape
-    # default must divide s (the kernel asserts it): largest divisor <= 128
-    chunk = cfg.get("chunk") or max(d for d in range(1, min(128, s) + 1) if s % d == 0)
-    lc = log_a.reshape(bsz, h, s // chunk, chunk)
-    lcum = jnp.cumsum(lc, axis=-1).reshape(bsz, h, s, 1)
+    chunk = _ssd_chunk(cfg, log_a.shape[-1])
+    lcum = _ssd_lcum(log_a, chunk)
     return ssd_scan(xdt, b, c, lcum, chunk=chunk, interpret=interpret)
 
 
@@ -599,8 +927,9 @@ register(KernelOp(
     schedules=(
         Schedule("pallas", "pallas", _ssd_pallas,
                  available=_fits_vmem("ssd"),
-                 cost=_model_cost("ssd"), autotune_schedule="default"),
-        Schedule("reference", "reference", _ssd_reference),
+                 cost=_model_cost("ssd"), autotune_schedule="default",
+                 vjp=True),
+        Schedule("reference", "reference", _ssd_reference, vjp=True),
     ),
 ))
 
@@ -624,8 +953,9 @@ register(KernelOp(
     schedules=(
         Schedule("pallas", "pallas", _rglru_pallas,
                  available=_fits_vmem("rglru"),
-                 cost=_model_cost("rglru"), autotune_schedule="default"),
-        Schedule("reference", "reference", _rglru_reference),
+                 cost=_model_cost("rglru"), autotune_schedule="default",
+                 vjp=True),
+        Schedule("reference", "reference", _rglru_reference, vjp=True),
     ),
 ))
 

@@ -1,8 +1,8 @@
 """Shared block-size autotuner for all Pallas kernels.
 
 Replaces the hardcoded 128x128(x128) blocks in the ``ops.py`` entry
-points with a per-``(kernel, schedule, shape, dtype)`` choice, in three
-stages:
+points with a per-``(kernel, schedule, direction, shape, dtype)``
+choice, in three stages:
 
 1. **Candidate generation** — per kernel family, enumerate MXU/VPU
    aligned block combinations clipped to the problem shape
@@ -16,9 +16,20 @@ stages:
    ``runner`` is supplied (used by the benchmarks; in interpret mode
    this times the interpreter, on TPU the Mosaic build).
 
+The ``direction`` axis ("fwd" / "bwd") exists because the custom-VJP
+backward kernels have different working sets than their forward
+counterparts (flash-attention backward keeps q/k/v *and* dO plus the
+gradient accumulator resident; the SSD reverse-chunk kernel carries two
+(P, N) states and three extra (Q, Q) matrices), so the same block that
+wins forward can overflow VMEM backward.  The matmul family has no
+backward generator of its own: its VJP re-enters dispatch as ordinary
+forward matmuls (dA = g.B^T, dB = A^T.g), which autotune under their own
+shapes.
+
 Results land in a process-level cache so entry points resolve repeat
-shapes for free.  The cache key is ``(kernel, schedule, shape, dtype)``;
-``cache_info()`` / ``clear_cache()`` expose it for tests and tools.
+shapes for free.  The cache key is
+``(kernel, schedule, direction, shape, dtype)``; ``cache_info()`` /
+``clear_cache()`` expose it for tests and tools.
 
 The cache also **persists to disk** (``~/.cache/repro/autotune.json``,
 override with ``REPRO_AUTOTUNE_CACHE``) so measured sweeps survive
@@ -57,7 +68,7 @@ CACHE_ENV_VAR = "REPRO_AUTOTUNE_CACHE"
 # changes semantics: persisted winners from an older format are ignored
 # (and the file is rewritten) instead of resurrecting configs the new
 # code would never pick — e.g. blocks that no longer fit a shrunk budget.
-CACHE_FORMAT_VERSION = 1
+CACHE_FORMAT_VERSION = 2  # v2: direction ("fwd"/"bwd") joined the key
 _VERSION_KEY = "__format_version__"
 
 VMEM_BYTES = 16 * 2**20  # per-core VMEM (TPU v4/v5-class)
@@ -164,13 +175,20 @@ def _matmul_candidates(schedule: str, shape: Sequence[int], dsize: int) -> list[
 _FA_BLOCKS = (64, 128, 256, 512)
 
 
-def _flash_candidates(shape: Sequence[int], dsize: int) -> list[Candidate]:
+def _flash_candidates(shape: Sequence[int], dsize: int, direction: str) -> list[Candidate]:
     b, h, sq, sk, d = shape
     out = []
     for bq, bk in itertools.product(_divisors(sq, _FA_BLOCKS), _divisors(sk, _FA_BLOCKS)):
-        # q/k/v/o blocks double-buffered + fp32 softmax state scratch
-        vmem = 2 * (bq * d + 2 * bk * d + bq * d) * dsize + bq * (2 + d) * 4
-        steps = b * h * _cdiv(sq, bq) * _cdiv(sk, bk)
+        if direction == "bwd":
+            # dq / dkv kernels: q/k/v/dO blocks double-buffered, the
+            # (bq, d) or (bk, d) fp32 gradient accumulators, lse + delta
+            # rows; grid runs twice (one pass per gradient kernel)
+            vmem = 2 * (2 * bq * d + 2 * bk * d) * dsize + (bq + bk) * d * 4 + 4 * bq * 4
+            steps = 2 * b * h * _cdiv(sq, bq) * _cdiv(sk, bk)
+        else:
+            # q/k/v/o blocks double-buffered + fp32 softmax state scratch
+            vmem = 2 * (bq * d + 2 * bk * d + bq * d) * dsize + bq * (2 + d) * 4
+            steps = b * h * _cdiv(sq, bq) * _cdiv(sk, bk)
         out.append(_mk({"bq": bq, "bk": bk}, vmem, steps))
     return out
 
@@ -178,12 +196,20 @@ def _flash_candidates(shape: Sequence[int], dsize: int) -> list[Candidate]:
 _SSD_CHUNKS = (32, 64, 128, 256)
 
 
-def _ssd_candidates(shape: Sequence[int], dsize: int) -> list[Candidate]:
+def _ssd_candidates(shape: Sequence[int], dsize: int, direction: str) -> list[Candidate]:
     b, h, s, p, n = shape
     out = []
     for chunk in _divisors(s, _SSD_CHUNKS):
-        # xdt/b/c/lcum/o blocks double-buffered + (P, N) state + (Q, Q) scores
-        vmem = 2 * (2 * chunk * p + 2 * chunk * n + chunk) * 4 + (p * n + chunk * chunk) * 4
+        if direction == "bwd":
+            # reverse-chunk kernel: xdt/b/c/dy in, dx/db/dc/dl out (all
+            # double-buffered), carried adjoint + chunk-initial states
+            # (2 x (P, N)) and the S/T/Z (Q, Q) intra-chunk matrices
+            vmem = 2 * (4 * chunk * p + 6 * chunk * n + 2 * chunk) * 4 \
+                + (2 * p * n + 3 * chunk * chunk) * 4
+        else:
+            # xdt/b/c/lcum/o blocks double-buffered + (P, N) state + (Q, Q) scores
+            vmem = 2 * (2 * chunk * p + 2 * chunk * n + chunk) * 4 \
+                + (p * n + chunk * chunk) * 4
         steps = b * h * _cdiv(s, chunk)
         out.append(_mk({"chunk": chunk}, vmem, steps))
     return out
@@ -192,21 +218,34 @@ def _ssd_candidates(shape: Sequence[int], dsize: int) -> list[Candidate]:
 _LRU_BLOCKS = (128, 256, 512)
 
 
-def _rglru_candidates(shape: Sequence[int], dsize: int) -> list[Candidate]:
+def _rglru_candidates(shape: Sequence[int], dsize: int, direction: str) -> list[Candidate]:
     b, s, d = shape
     out = []
     for bs, bd in itertools.product(_divisors(s, _LRU_BLOCKS), _divisors(d, _LRU_BLOCKS)):
-        vmem = 2 * 3 * bs * bd * 4 + bd * 4
+        # bwd streams one extra operand (h_prev) and writes two outputs,
+        # but the footprint stays 4-ish (bs, bd) panels either way
+        panels = 4 if direction == "bwd" else 3
+        vmem = 2 * panels * bs * bd * 4 + bd * 4
         steps = b * _cdiv(d, bd) * _cdiv(s, bs)
         out.append(_mk({"bd": bd, "bs": bs}, vmem, steps))
     return out
 
 
 _GENERATORS: dict[str, Callable[..., list[Candidate]]] = {
-    "matmul": _matmul_candidates,
-    "flash_attention": lambda schedule, shape, dsize: _flash_candidates(shape, dsize),
-    "ssd": lambda schedule, shape, dsize: _ssd_candidates(shape, dsize),
-    "rglru": lambda schedule, shape, dsize: _rglru_candidates(shape, dsize),
+    # matmul backward needs no generator of its own: dA/dB re-enter
+    # dispatch as forward matmul problems (see module docstring)
+    "matmul": lambda schedule, shape, dsize, direction: _matmul_candidates(
+        schedule, shape, dsize
+    ),
+    "flash_attention": lambda schedule, shape, dsize, direction: _flash_candidates(
+        shape, dsize, direction
+    ),
+    "ssd": lambda schedule, shape, dsize, direction: _ssd_candidates(
+        shape, dsize, direction
+    ),
+    "rglru": lambda schedule, shape, dsize, direction: _rglru_candidates(
+        shape, dsize, direction
+    ),
 }
 
 
@@ -215,33 +254,39 @@ _GENERATORS: dict[str, Callable[..., list[Candidate]]] = {
 # ---------------------------------------------------------------------------
 
 
+DIRECTIONS = ("fwd", "bwd")
+
+
 def candidates(
     kernel: str,
     shape: Sequence[int],
     dtype,
     *,
     schedule: str = "default",
+    direction: str = "fwd",
     budget_bytes: int = VMEM_BUDGET,
 ) -> list[Candidate]:
     """VMEM-pruned candidate configs, best cost-model score first."""
     return list(_candidates_cached(
         kernel, tuple(int(s) for s in shape), jnp.dtype(dtype).name,
-        schedule, int(budget_bytes),
+        schedule, direction, int(budget_bytes),
     ))
 
 
 @functools.lru_cache(maxsize=4096)
 def _candidates_cached(
     kernel: str, shape: tuple[int, ...], dtype_name: str,
-    schedule: str, budget_bytes: int,
+    schedule: str, direction: str, budget_bytes: int,
 ) -> tuple[Candidate, ...]:
     # memoized: the dispatch layer probes candidates several times per
     # resolution (availability predicate + cost hook per schedule, then
     # best_config) and the generation is pure in these arguments
     if kernel not in _GENERATORS:
         raise ValueError(f"unknown kernel family: {kernel!r} (have {sorted(_GENERATORS)})")
+    if direction not in DIRECTIONS:
+        raise ValueError(f"unknown direction: {direction!r} (have {DIRECTIONS})")
     dsize = jnp.dtype(dtype_name).itemsize
-    cands = _GENERATORS[kernel](schedule, shape, dsize)
+    cands = _GENERATORS[kernel](schedule, shape, dsize, direction)
     pruned = [c for c in cands if c.vmem_bytes <= budget_bytes]
     if not pruned:  # degenerate giant shape: keep the smallest footprint
         pruned = [min(cands, key=lambda c: c.vmem_bytes)]
@@ -276,8 +321,13 @@ _CACHE: dict[tuple, dict[str, int]] = {}
 _DISK = {"loaded": False, "dirty": False, "atexit": False}
 
 
-def cache_key(kernel: str, schedule: str, shape: Sequence[int], dtype) -> tuple:
-    return (kernel, schedule, tuple(int(s) for s in shape), jnp.dtype(dtype).name)
+def cache_key(
+    kernel: str, schedule: str, shape: Sequence[int], dtype, direction: str = "fwd"
+) -> tuple:
+    return (
+        kernel, schedule, direction,
+        tuple(int(s) for s in shape), jnp.dtype(dtype).name,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -293,13 +343,15 @@ def cache_path() -> pathlib.Path:
 
 
 def _key_to_str(key: tuple) -> str:
-    kernel, schedule, shape, dtype = key
-    return "|".join([kernel, schedule, "x".join(str(s) for s in shape), dtype])
+    kernel, schedule, direction, shape, dtype = key
+    return "|".join(
+        [kernel, schedule, direction, "x".join(str(s) for s in shape), dtype]
+    )
 
 
 def _str_to_key(text: str) -> tuple:
-    kernel, schedule, shape, dtype = text.split("|")
-    return (kernel, schedule, tuple(int(s) for s in shape.split("x")), dtype)
+    kernel, schedule, direction, shape, dtype = text.split("|")
+    return (kernel, schedule, direction, tuple(int(s) for s in shape.split("x")), dtype)
 
 
 def _load_disk() -> None:
@@ -363,11 +415,12 @@ def best_config(
     dtype,
     *,
     schedule: str = "default",
+    direction: str = "fwd",
     runner: Callable[..., object] | None = None,
     budget_bytes: int = VMEM_BUDGET,
     max_trials: int = 8,
 ) -> dict[str, int]:
-    """Best block config for ``(kernel, schedule, shape, dtype)``.
+    """Best block config for ``(kernel, schedule, direction, shape, dtype)``.
 
     Cost-model pick by default (cheap, deterministic — safe to call at
     trace time from the jitted entry points); measured sweep when a
@@ -375,11 +428,14 @@ def best_config(
     cached for the process lifetime and persisted to ``cache_path()``.
     """
     _load_disk()
-    key = cache_key(kernel, schedule, shape, dtype)
+    key = cache_key(kernel, schedule, shape, dtype, direction)
     hit = _CACHE.get(key)
     if hit is not None:
         return dict(hit)
-    cands = candidates(kernel, shape, dtype, schedule=schedule, budget_bytes=budget_bytes)
+    cands = candidates(
+        kernel, shape, dtype,
+        schedule=schedule, direction=direction, budget_bytes=budget_bytes,
+    )
     if runner is None:
         best = cands[0].dict()
     else:

@@ -40,9 +40,10 @@ from repro.optim import adamw
 def train_loop(args) -> dict:
     if getattr(args, "kernel_policy", None):
         # benchmarks force schedules/backends here; REPRO_KERNEL_POLICY
-        # works too, this flag just wins over the env var.  (The no-VJP
-        # reference-backend guard for gradients lives in dist/step.py's
-        # loss_of, where every grad path passes through.)
+        # works too, this flag just wins over the env var.  Training no
+        # longer pins the reference backend: every pallas schedule has a
+        # custom VJP, so the default policy trains through the fused
+        # kernels on TPU (and the reference backend off-TPU, as always).
         kernels.set_policy(args.kernel_policy)
     cfg = get_config(args.arch, reduced=args.reduced)
     if cfg.family == "audio":

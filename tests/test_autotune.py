@@ -130,7 +130,7 @@ def test_disk_cache_roundtrip(tmp_path, monkeypatch):
     # cost-model entries batch; the explicit flush stands in for atexit
     autotune.flush_disk_cache()
     data = json.loads(path.read_text())
-    assert data["matmul|tiled|512x256x256|float32"] == cfg
+    assert data["matmul|tiled|fwd|512x256x256|float32"] == cfg
 
     _simulate_restart()
     calls = []
@@ -183,7 +183,7 @@ def test_disk_cache_foreign_rows_survive_and_are_skipped(tmp_path, monkeypatch):
     _simulate_restart()
     # malformed row is skipped on load, valid rows still hit
     cfg = autotune.best_config("matmul", (512, 256, 256), jnp.float32, schedule="tiled")
-    assert cfg == data["matmul|tiled|512x256x256|float32"]
+    assert cfg == data["matmul|tiled|fwd|512x256x256|float32"]
 
 
 def test_clear_cache_disk_deletes_file(tmp_path, monkeypatch):
@@ -213,11 +213,44 @@ def test_disk_cache_old_format_is_ignored_and_rewritten(tmp_path, monkeypatch):
     must not resurrect stale winners; the next save heals it."""
     path = tmp_path / "autotune.json"
     monkeypatch.setenv(autotune.CACHE_ENV_VAR, str(path))
-    stale = {"matmul|tiled|512x256x256|float32": {"gm": 8, "bn": 8, "bk": 8}}
+    stale = {"matmul|tiled|fwd|512x256x256|float32": {"gm": 8, "bn": 8, "bk": 8}}
     path.write_text(json.dumps(stale))  # no version field = pre-versioning era
     cfg = autotune.best_config("matmul", (512, 256, 256), jnp.float32, schedule="tiled")
-    assert cfg != stale["matmul|tiled|512x256x256|float32"]  # recomputed
+    assert cfg != stale["matmul|tiled|fwd|512x256x256|float32"]  # recomputed
     autotune.flush_disk_cache()
     data = json.loads(path.read_text())
     assert data[autotune._VERSION_KEY] == autotune.CACHE_FORMAT_VERSION
-    assert data["matmul|tiled|512x256x256|float32"] == cfg
+    assert data["matmul|tiled|fwd|512x256x256|float32"] == cfg
+
+
+def test_backward_direction_is_a_distinct_cache_key():
+    """Backward kernels tune separately: same (kernel, schedule, shape,
+    dtype) but direction="bwd" gets its own candidates and cache row."""
+    shape = (2, 4, 512, 512, 64)
+    fwd = autotune.best_config("flash_attention", shape, jnp.float32)
+    bwd = autotune.best_config("flash_attention", shape, jnp.float32, direction="bwd")
+    keys = set(autotune.cache_info())
+    assert autotune.cache_key("flash_attention", "default", shape, jnp.float32) in keys
+    assert autotune.cache_key(
+        "flash_attention", "default", shape, jnp.float32, "bwd"
+    ) in keys
+    assert fwd and bwd  # both picked something VMEM-legal
+    # the bwd VMEM model is strictly larger than fwd for the same blocks
+    f = {c.config: c for c in autotune.candidates("flash_attention", shape, jnp.float32)}
+    b = {c.config: c for c in autotune.candidates(
+        "flash_attention", shape, jnp.float32, direction="bwd")}
+    shared = set(f) & set(b)
+    assert shared and all(b[k].vmem_bytes > f[k].vmem_bytes for k in shared)
+
+
+def test_backward_candidates_divide_shapes_and_unknown_direction_raises():
+    for c in autotune.candidates("ssd", (1, 2, 384, 64, 32), jnp.float32,
+                                 direction="bwd"):
+        assert 384 % c.dict()["chunk"] == 0
+    for c in autotune.candidates("rglru", (2, 384, 256), jnp.float32,
+                                 direction="bwd"):
+        cfg = c.dict()
+        assert 384 % cfg["bs"] == 0 and 256 % cfg["bd"] == 0
+    with pytest.raises(ValueError):
+        autotune.candidates("matmul", (64, 64, 64), jnp.float32,
+                            schedule="tiled", direction="sideways")

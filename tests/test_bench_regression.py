@@ -100,3 +100,17 @@ def test_broad_regression_triggers_anchor_advisory():
     )
     assert not fails  # the blind spot, by design
     assert any("suite-wide" in w for w in warns)
+
+
+def test_anchor_advisory_uses_both_direction_anchors():
+    """The cross-check medians the fwd and bwd reference anchors: one
+    anchor drifting with the pallas rows (e.g. a dispatch-layer cost
+    affecting backward only) must not silence the warning."""
+    base = _rows(kernel_a=50000.0, kernel_b=60000.0, kernel_c=80000.0,
+                 kernel_linear_dispatch=20000.0,
+                 kernel_linear_dispatch_bwd=30000.0)
+    fresh = _rows(kernel_a=70000.0, kernel_b=84000.0, kernel_c=112000.0,
+                  kernel_linear_dispatch=20000.0,
+                  kernel_linear_dispatch_bwd=30000.0)
+    _, warns = compare(base, fresh, min_us=1000.0)
+    assert any("suite-wide" in w and "2 anchors" in w for w in warns)

@@ -50,11 +50,11 @@ def test_policy_parse_forms():
 
 def test_policy_env_var_and_global(monkeypatch):
     monkeypatch.setenv(api.POLICY_ENV_VAR, "schedule=unicast")
-    name, backend, _ = kernels.resolve("matmul", (256, 128, 128), jnp.float32)
+    name, backend, _, _ = kernels.resolve("matmul", (256, 128, 128), jnp.float32)
     assert (name, backend) == ("unicast", "pallas")
     # set_policy wins over the env var
     kernels.set_policy("tiled")
-    name, _, _ = kernels.resolve("matmul", (256, 128, 128), jnp.float32)
+    name, _, _, _ = kernels.resolve("matmul", (256, 128, 128), jnp.float32)
     assert name == "tiled"
     # and use_policy restores the previous global on exit
     with kernels.use_policy("mcast"):
@@ -71,7 +71,7 @@ def test_forced_schedule_conflicting_backend_raises():
 
 
 def test_autotune_off_uses_kernel_defaults():
-    _, _, cfg = kernels.resolve(
+    _, _, cfg, _ = kernels.resolve(
         "matmul", (512, 256, 256), jnp.float32,
         policy=api.DispatchPolicy(schedule="tiled", autotune=False),
     )
@@ -100,14 +100,14 @@ def test_off_tpu_default_is_reference():
         ("ssd", (1, 2, 256, 64, 64)),
         ("rglru", (1, 256, 256)),
     ]:
-        name, backend, cfg = kernels.resolve(op_name, shape, jnp.float32)
+        name, backend, cfg, _ = kernels.resolve(op_name, shape, jnp.float32)
         assert backend == "reference" and cfg == {}, (op_name, name, backend)
 
 
 def test_backend_pallas_picks_cheapest_available_schedule():
     # small shape: the flat mcast schedule fits VMEM and moves the fewest
     # modeled HBM bytes, so the pallas backend should pick it
-    name, backend, _ = kernels.resolve(
+    name, backend, _, _ = kernels.resolve(
         "matmul", (256, 256, 256), jnp.float32, policy="pallas"
     )
     assert backend == "pallas"
@@ -127,7 +127,7 @@ def test_mcast_availability_predicate_excludes_huge_m():
     mcast = api.op("matmul").schedule("mcast")
     assert mcast.available(p_small)
     assert not mcast.available(p_huge)
-    name, backend, _ = kernels.resolve(
+    name, backend, _, _ = kernels.resolve(
         "matmul", (65536, 2048, 2048), jnp.float32, policy="pallas"
     )
     assert (name, backend) == ("tiled", "pallas")
@@ -142,7 +142,7 @@ def test_forced_pallas_backend_never_silently_substitutes_reference():
     p = api.Problem(shape, "float32")
     assert not api.op("ssd").schedule("pallas").available(p)
     assert kernels.resolve("ssd", shape, jnp.float32)[1] == "reference"
-    name, backend, _ = kernels.resolve(
+    name, backend, _, _ = kernels.resolve(
         "ssd", shape, jnp.float32, policy=api.DispatchPolicy(backend="pallas")
     )
     assert (name, backend) == ("pallas", "pallas")
@@ -371,3 +371,110 @@ def test_nn_layer_forward_under_forced_pallas_policy():
     np.testing.assert_allclose(
         np.asarray(base), np.asarray(forced), rtol=2e-2, atol=2e-2
     )
+
+
+# ---------------------------------------------------------------------------
+# vjp capability flag
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def _fake_op():
+    """A synthetic family with one VJP-less pallas schedule next to a
+    vjp-capable one (all four real families are fully vjp-capable now,
+    so the exclusion paths need a fabricated straggler)."""
+    fake = api.KernelOp(
+        name="fake_op",
+        problem=lambda a: a.shape,
+        schedules=(
+            api.Schedule("novjp", "pallas", lambda a, *, cfg, opts, interpret: a * 2,
+                         cost=lambda p: 1.0),
+            api.Schedule("withvjp", "pallas", lambda a, *, cfg, opts, interpret: a * 2,
+                         cost=lambda p: 2.0, vjp=True),
+            api.Schedule("reference", "reference",
+                         lambda a, *, cfg, opts, interpret: a * 2, vjp=True),
+        ),
+    )
+    api.register(fake)
+    yield fake
+    del api._REGISTRY["fake_op"]
+
+
+def test_resolve_reports_vjp_capability():
+    res = kernels.resolve("matmul", (256, 128, 128), jnp.float32, policy="tiled")
+    assert res.vjp is True and res.schedule == "tiled"
+    # every registered schedule of the four real families carries a VJP
+    for op_name in kernels.ops():
+        for sched in api.op(op_name).schedules:
+            assert sched.vjp, (op_name, sched.name)
+
+
+def test_forced_vjpless_schedule_under_grad_raises(_fake_op):
+    x = jnp.ones((8, 8))
+    with pytest.raises(ValueError, match="no VJP"):
+        jax.grad(lambda x_: _fake_op(x_, policy="novjp").sum())(x)
+    # under grad(jit(...)) the inner jit traces before anything
+    # differentiates, so eager detection cannot fire — the custom-VJP
+    # backstop must still raise the same clear error, not an obscure
+    # pallas_call one
+    with pytest.raises(ValueError, match="no VJP"):
+        jax.grad(jax.jit(lambda x_: _fake_op(x_, policy="novjp").sum()))(x)
+    # ...but running it undifferentiated stays fine
+    np.testing.assert_array_equal(
+        np.asarray(_fake_op(x, policy="novjp")), np.asarray(x * 2)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(lambda x_: _fake_op(x_, policy="novjp"))(x)),
+        np.asarray(x * 2),
+    )
+
+
+def test_auto_dispatch_excludes_vjpless_schedule_under_grad(_fake_op):
+    p = api.Problem((8, 8), "float32")
+    # undifferentiated: cheapest pallas schedule wins (the vjp-less one)
+    sched, _ = _fake_op.resolve(p, api.DispatchPolicy(backend="pallas"))
+    assert sched.name == "novjp"
+    # under differentiation the same policy falls over to the vjp-capable
+    sched, _ = _fake_op.resolve(
+        p, api.DispatchPolicy(backend="pallas"), needs_vjp=True
+    )
+    assert sched.name == "withvjp"
+    res = kernels.resolve("fake_op", (8, 8), jnp.float32, policy="pallas",
+                          needs_vjp=True)
+    assert (res.schedule, res.vjp) == ("withvjp", True)
+
+
+def test_forced_backend_without_any_vjp_schedule_raises(_fake_op):
+    only_novjp = api.KernelOp(
+        name="fake_novjp_only",
+        problem=lambda a: a.shape,
+        schedules=(
+            api.Schedule("novjp", "pallas", lambda a, *, cfg, opts, interpret: a,),
+            api.Schedule("reference", "reference",
+                         lambda a, *, cfg, opts, interpret: a, vjp=True),
+        ),
+    )
+    api.register(only_novjp)
+    try:
+        with pytest.raises(ValueError, match="no 'pallas' schedule has a VJP"):
+            only_novjp.resolve(
+                api.Problem((8, 8), "float32"),
+                api.DispatchPolicy(backend="pallas"), needs_vjp=True,
+            )
+        # auto-dispatch (no forced backend) falls back to reference instead
+        sched, _ = only_novjp.resolve(
+            api.Problem((8, 8), "float32"), None, needs_vjp=True
+        )
+        assert sched.backend == "reference"
+    finally:
+        del api._REGISTRY["fake_novjp_only"]
+
+
+def test_grad_detection_ignores_plain_jit_and_vmap(_fake_op):
+    """jit / vmap tracing alone is not differentiation — the vjp-less
+    schedule must stay reachable there."""
+    x = jnp.ones((8, 8))
+    out = jax.jit(lambda x_: _fake_op(x_, policy="novjp"))(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x * 2))
+    out = jax.vmap(lambda x_: _fake_op(x_, policy="novjp"))(x[None])
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(x * 2))
