@@ -11,6 +11,8 @@ Benches:
   fig3c_*      Occamy matmul roofline + kernel (paper fig. 3c)
   fig3b_tpu_*  collective-bytes hierarchy on the TPU mesh (adaptation)
   kernel_*     Pallas kernel interpret-mode sanity timings
+  kernel_serve_* paged-KV serving rows: decode tokens/s + prefix-cache
+               prefill latency (bench_serve.py)
 """
 from __future__ import annotations
 
@@ -55,6 +57,10 @@ def main() -> None:
     from benchmarks import bench_kernels
 
     rows += bench_kernels.run()
+
+    from benchmarks import bench_serve
+
+    rows += bench_serve.run()
 
     print("name,us_per_call,derived")
     for r in rows:

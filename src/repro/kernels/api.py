@@ -89,6 +89,8 @@ from repro.kernels.matmul.matmul import (
     matmul_mcast_tiled,
     matmul_unicast,
 )
+from repro.kernels.paged_attention.paged_attention import paged_attention_decode
+from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kernels.rglru.ref import rglru_scan_ref
 from repro.kernels.rglru.rglru import rglru_scan, rglru_scan_bwd
 from repro.kernels.ssd.ref import ssd_scan_ref
@@ -902,6 +904,66 @@ register(KernelOp(
                  cost=_model_cost("flash_attention"), autotune_schedule="default",
                  vjp=True),
         Schedule("reference", "reference", _flash_reference, vjp=True),
+    ),
+))
+
+
+# ---------------------------------------------------------------------------
+# paged attention family (serving decode against a paged KV pool)
+# ---------------------------------------------------------------------------
+
+
+def _paged_pallas(q, k_pages, v_pages, block_table, start, lengths, *scales,
+                  cfg, opts, interpret):
+    if q.shape[1] != 1 or scales:
+        what = (
+            f"got {q.shape[1]} query tokens" if q.shape[1] != 1
+            else "got int8 pages with dequant scales"
+        )
+        raise ValueError(
+            "paged_attention: the pallas schedule is a single-token bf16/fp32 "
+            f"decode kernel ({what}); multi-token (prefix-hit prefill) and "
+            "int8 (dequant-on-gather) calls run the reference schedule — "
+            "drop the forced pallas policy and let dispatch pick it"
+        )
+    o = paged_attention_decode(
+        q[:, 0], k_pages, v_pages, block_table, start, lengths,
+        softcap=opts["softcap"], interpret=interpret,
+    )
+    return o[:, None]
+
+
+def _paged_reference(q, k_pages, v_pages, block_table, start, lengths, *scales,
+                     cfg, opts, interpret):
+    k_scale, v_scale = scales if scales else (None, None)
+    return paged_attention_ref(
+        q, k_pages, v_pages, block_table, start, lengths,
+        softcap=opts["softcap"], k_scale=k_scale, v_scale=v_scale,
+    )
+
+
+_paged_fits = _fits_vmem("paged_attention")
+
+register(KernelOp(
+    name="paged_attention",
+    # q: (b, s, h, d); pages: (kvh, P, ps, d); table: (b, pages_per_seq);
+    # start/lengths: (b,).  Trailing flag: number of scale arrays (int8
+    # pools pass 2 — the availability predicate reads it, since opts
+    # can't see arity)
+    problem=lambda q, kp, vp, bt, st, ln, *scales: (
+        q.shape[0], q.shape[1], q.shape[2], kp.shape[0],
+        bt.shape[1], kp.shape[2], q.shape[3], len(scales),
+    ),
+    opt_defaults=(("softcap", None),),
+    schedules=(
+        # the pallas kernel is decode-shaped: one query token, bf16/fp32
+        # pages (int8 pools dequant-on-gather in the reference backend)
+        Schedule("pallas", "pallas", _paged_pallas,
+                 available=lambda p: (
+                     p.shape[1] == 1 and p.shape[-1] == 0 and _paged_fits(p)
+                 ),
+                 cost=_model_cost("paged_attention"), vjp=False),
+        Schedule("reference", "reference", _paged_reference, vjp=True),
     ),
 ))
 

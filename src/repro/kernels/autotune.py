@@ -215,6 +215,24 @@ def _ssd_candidates(shape: Sequence[int], dsize: int, direction: str) -> list[Ca
     return out
 
 
+def _paged_attention_candidates(
+    shape: Sequence[int], dsize: int, direction: str
+) -> list[Candidate]:
+    """Paged decode attention has no free block knobs — the page size is
+    fixed by the pool geometry — but modeling its one configuration
+    gives the dispatch layer the same availability (VMEM fit) and cost
+    hooks every other family gets.  Shape key:
+    (b, s, h, kvh, pages_per_seq, page_size, d, n_scale_arrays)."""
+    b, s, h, kvh, pages, ps, d, _ = shape
+    group = max(1, h // max(kvh, 1))
+    # q/o (group, d) resident + double-buffered k/v page streams
+    # + fp32 softmax state scratch (m, l, acc)
+    vmem = 2 * (group * d + 2 * ps * d) * dsize + group * (2 + d) * 4
+    steps = b * kvh * pages
+    hbm = (b * h * d + 2 * kvh * b * pages * ps * d) * dsize
+    return [_mk({}, vmem, steps, hbm)]
+
+
 _LRU_BLOCKS = (128, 256, 512)
 
 
@@ -239,6 +257,9 @@ _GENERATORS: dict[str, Callable[..., list[Candidate]]] = {
     ),
     "flash_attention": lambda schedule, shape, dsize, direction: _flash_candidates(
         shape, dsize, direction
+    ),
+    "paged_attention": lambda schedule, shape, dsize, direction: (
+        _paged_attention_candidates(shape, dsize, direction)
     ),
     "ssd": lambda schedule, shape, dsize, direction: _ssd_candidates(
         shape, dsize, direction

@@ -1,0 +1,7 @@
+from repro.kernels.paged_attention.paged_attention import (  # noqa: F401
+    paged_attention_decode,
+)
+from repro.kernels.paged_attention.ref import (  # noqa: F401
+    gather_pages,
+    paged_attention_ref,
+)

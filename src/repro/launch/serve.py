@@ -1,22 +1,28 @@
 """Serving launcher: batched prefill + decode with continuous batching.
 
-A miniature but real serving loop:
+Two KV-cache backends behind one CLI:
 
-* requests enter a queue with different prompt lengths,
-* prefill runs per-request (right-padded to the bucket), writing into the
-  shared ring-buffer KV cache at the request's slot,
-* decode steps run the whole active batch every iteration; finished
-  requests free their slot for the next queued request (continuous
-  batching),
-* the decode step is the same ``serve_step`` the dry-run lowers.
+* ``--kv paged`` (the serving subsystem, ``repro.serve``): page-pool KV
+  cache with radix-tree **prefix sharing** — a prompt prefix prefilled
+  once is multicast (refcount bump, zero compute) to every request that
+  shares it — plus watermark admission, preemption-by-swap, and the
+  ``paged_attention`` kernel op.
+* ``--kv dense`` (the fallback, this module's :class:`Server`): one
+  right-sized ring-buffer cache slot per batch lane, prefill written
+  in place into the slot.
+
+Both paths prefill in **shared length buckets** (one XLA program per
+bucket, not one per prompt length; padded positions are masked out of
+the cache) and produce identical token streams — CI runs the smoke
+workload under both and diffs the output.
 
 CPU demo: PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-    --reduced --requests 6 --max-new 16
+    --reduced --requests 6 --max-new 16 [--kv paged]
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -25,41 +31,17 @@ import numpy as np
 from repro import kernels
 from repro.configs import ARCHS, get_config
 from repro.models import lm
-from repro.nn.attention import KvCache
-
-
-def _pad_kv_cache(tree, slots: int):
-    """Grow every KvCache in a prefill cache tree to ``slots`` ring slots
-    (new slots marked empty via pos=-1).  Recurrent states pass through
-    (they are size-independent)."""
-
-    def pad(c):
-        if not isinstance(c, KvCache):
-            return c
-        extra = slots - c.k.shape[2]
-        if extra <= 0:
-            return c
-        return KvCache(
-            k=jnp.pad(c.k, ((0, 0), (0, 0), (0, extra), (0, 0), (0, 0))),
-            v=jnp.pad(c.v, ((0, 0), (0, 0), (0, extra), (0, 0), (0, 0))),
-            pos=jnp.pad(c.pos, ((0, 0), (0, 0), (0, extra)), constant_values=-1),
-        )
-
-    return jax.tree.map(pad, tree, is_leaf=lambda x: isinstance(x, KvCache))
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_new: int
-    out: list[int] = dataclasses.field(default_factory=list)
+from repro.serve import PagedEngine, Request, pad_to_bucket  # noqa: F401 (Request re-export)
 
 
 class Server:
-    """Continuous-batching decode server (single-host demo scale)."""
+    """Continuous-batching decode server, dense ring-buffer KV caches
+    (single-host demo scale).  The dense fallback: every arch family
+    (local windows, recurrent mixers) — the paged engine covers
+    global-attention models."""
 
-    def __init__(self, cfg, params, *, max_batch: int = 4, cache_len: int = 256):
+    def __init__(self, cfg, params, *, max_batch: int = 4, cache_len: int = 256,
+                 prompt_bucket: int = 16):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -68,13 +50,29 @@ class Server:
         self.active: dict[int, Request] = {}  # slot -> request
         self.pos = np.zeros(max_batch, np.int32)
         self.last_tok = np.zeros(max_batch, np.int32)
+        # right-pad-to-bucket prefill is exact only when padded tokens
+        # cannot influence real ones: global attention (no ring wrap),
+        # no recurrent mixer state (which would absorb the pads), and
+        # no MoE (expert capacity scales with the padded length, so
+        # pads would consume capacity and change real tokens' routing)
+        self._bucket = prompt_bucket if all(
+            bd.mixer == "attn" and bd.window is None and bd.ff != "moe"
+            for bd in cfg.layer_defs
+        ) else None
 
         self._decode = jax.jit(
             lambda p, c, t, i: lm.decode_step(p, cfg, c, t, i)
         )
-        self._prefill_one = jax.jit(
-            lambda p, t: lm.prefill(p, cfg, t, cache_slots=cache_len)
-        )
+
+        def prefill_one(p, t, li, true_len):
+            logits, caches = lm.prefill(
+                p, cfg, t, cache_slots=cache_len, logit_index=li
+            )
+            # bucket padding wrote K/V rows past the prompt: mark them
+            # empty so they can never be attended to
+            return logits, lm.mask_cache_after(caches, true_len)
+
+        self._prefill_one = jax.jit(prefill_one)
 
     # ------------------------------------------------------------------
     def _admit(self, req: Request) -> bool:
@@ -82,18 +80,21 @@ class Server:
         if not free:
             return False
         slot = free[0]
-        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        logits, caches_one = self._prefill_one(self.params, toks)
-        # ring buffers already sized to cache_len via prefill(cache_slots=);
-        # _pad_kv_cache covers externally produced caches
-        # write the request's prefill cache into its batch slot
+        n = len(req.prompt)
+        toks = (pad_to_bucket(req.prompt, self._bucket) if self._bucket
+                else np.asarray(req.prompt, np.int32)[None])
+        logits, caches_one = self._prefill_one(
+            self.params, jnp.asarray(toks), jnp.int32(n - 1), jnp.int32(n)
+        )
+        # in-place slot write (no whole-cache pad/copy): every ring
+        # buffer is already sized to cache_len via prefill(cache_slots=)
         self.caches = jax.tree.map(
             lambda full, one: full.at[:, slot : slot + 1].set(one)
             if full.ndim >= 2 else full,
             self.caches, caches_one,
         )
         self.active[slot] = req
-        self.pos[slot] = len(req.prompt)
+        self.pos[slot] = n
         self.last_tok[slot] = int(jnp.argmax(logits[0, -1]))
         req.out.append(int(self.last_tok[slot]))
         return True
@@ -130,6 +131,14 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--kv", choices=("dense", "paged"), default="dense",
+                    help="KV-cache backend: dense ring buffers, or the "
+                         "paged pool with prefix sharing (repro.serve)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=None,
+                    help="page-pool size (default: dense-equivalent footprint)")
+    ap.add_argument("--kv-dtype", choices=("bf16", "int8"), default="bf16",
+                    help="paged page storage dtype (int8 = quantised pages)")
     ap.add_argument("--kernel-policy", default=None,
                     help='kernel dispatch policy, e.g. "tiled" or '
                          '"backend=reference" (see repro.kernels.api)')
@@ -139,7 +148,13 @@ def main() -> None:
         kernels.set_policy(args.kernel_policy)
     cfg = get_config(args.arch, reduced=args.reduced)
     params = lm.init(cfg, jax.random.PRNGKey(0))
-    server = Server(cfg, params, max_batch=args.max_batch)
+    if args.kv == "paged":
+        server = PagedEngine(
+            cfg, params, max_batch=args.max_batch, page_size=args.page_size,
+            num_pages=args.pages, kv_dtype=args.kv_dtype,
+        )
+    else:
+        server = Server(cfg, params, max_batch=args.max_batch)
     rng = np.random.default_rng(0)
     reqs = [
         Request(rid=i, prompt=list(rng.integers(0, cfg.vocab, size=rng.integers(4, 12))),
@@ -147,9 +162,13 @@ def main() -> None:
         for i in range(args.requests)
     ]
     done = server.run(reqs)
+    # stdout is the parity surface: CI diffs dense vs. paged output, so
+    # only mode-independent lines go here (mode details -> stderr)
     for r in sorted(done, key=lambda r: r.rid):
         print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {len(r.out)} tokens: {r.out[:8]}...")
     print(f"served {len(done)} requests with continuous batching")
+    if args.kv == "paged":
+        print(f"# paged kv stats: {server.stats()}", file=sys.stderr)
 
 
 if __name__ == "__main__":

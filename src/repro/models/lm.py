@@ -200,27 +200,138 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, kv_dtype: str = "bf
     return out
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     kv_dtype: str = "bf16"):
+    """Paged decode-cache tree: one page pool per attention layer, all
+    indexed by the same host-managed block tables (one allocation covers
+    the stack).  Paged serving covers global-attention blocks only —
+    recurrent mixers and local windows keep the dense path."""
+    out = {}
+    for i, (pattern, repeats) in enumerate(cfg.stages):
+        sb = {}
+        for j, bd in enumerate(pattern):
+            # MoE is excluded too: expert capacity scales with the
+            # *padded* call length (nn/moe.py), so the bucketed /
+            # suffix-only prefills this cache implies would route —
+            # and drop — real tokens differently than the dense path
+            if bd.mixer != "attn" or bd.window is not None or bd.ff == "moe":
+                raise ValueError(
+                    f"paged KV serving needs global-attention non-MoE blocks; "
+                    f"stage {i} block {j} has mixer={bd.mixer!r}, "
+                    f"window={bd.window!r}, ff={bd.ff!r} — serve this arch "
+                    f"with the dense fallback (--kv dense)"
+                )
+            maker = (
+                kvquant.init_quant_paged_cache if kv_dtype == "int8"
+                else attn_mod.init_paged_cache
+            )
+            sb[f"b{j}"] = maker(num_pages, page_size, cfg.attn)
+        out[f"stage{i}"] = _stack_tree([sb] * repeats)
+    return out
+
+
+_PAGED_CACHES = (attn_mod.PagedKvCache, kvquant.QuantPagedKvCache)
+_DENSE_CACHES = (attn_mod.KvCache, kvquant.QuantKvCache)
+
+
+def mask_cache_after(caches, length):
+    """Mark every cache position at or past ``length`` empty (pos=-1) —
+    the fixup that makes right-padded bucket prefills exact: the padded
+    tail's K/V rows stay in the ring but can never be attended to."""
+    def fix(c):
+        if isinstance(c, _DENSE_CACHES):
+            return c._replace(pos=jnp.where(c.pos >= length, -1, c.pos))
+        return c
+
+    return jax.tree.map(fix, caches, is_leaf=lambda x: isinstance(x, _DENSE_CACHES))
+
+
+def prefill_to_pages(dense_caches, paged_caches, block_table, length):
+    """Scatter a batch-1 dense prefill cache into the page pools.
+
+    ``block_table``: (pages,) page ids covering positions
+    ``[0, pages * page_size)``; rows past ``length`` (bucket padding) go
+    to the null page.  Cold paged prefills run the exact same
+    ``lm.prefill`` as the dense path and then land here, so the page
+    bytes are bit-identical to the dense fallback's ring bytes."""
+    flat_d, _ = jax.tree_util.tree_flatten(
+        dense_caches, is_leaf=lambda x: isinstance(x, _DENSE_CACHES)
+    )
+    flat_p, treedef = jax.tree_util.tree_flatten(
+        paged_caches, is_leaf=lambda x: isinstance(x, _PAGED_CACHES)
+    )
+    out = [
+        _scatter_dense_into_pages(d, p, block_table, length)
+        for d, p in zip(flat_d, flat_p)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _scatter_dense_into_pages(dense_c, paged_c, table, length):
+    """dense_c: stacked KvCache (repeats, 1, s_pad, kv, hd);
+    paged_c: stacked paged cache (repeats, kvh, P, ps, ...)."""
+    ps = paged_c.k_pages.shape[3]
+    k = dense_c.k[:, 0].transpose(0, 2, 1, 3)  # (repeats, kv, s_pad, hd)
+    v = dense_c.v[:, 0].transpose(0, 2, 1, 3)
+    s_pad = k.shape[2]
+    pos = jnp.arange(s_pad)
+    valid = pos < length
+    pidx = jnp.clip(pos // ps, 0, table.shape[0] - 1)
+    ids = jnp.where(valid, table[pidx], 0)  # null-page sink for padding
+    rows = jnp.where(valid, pos % ps, 0)
+    if isinstance(paged_c, kvquant.QuantPagedKvCache):
+        kq, ks = kvquant.quantize_kv(k)
+        vq, vs = kvquant.quantize_kv(v)
+        return kvquant.QuantPagedKvCache(
+            k_pages=paged_c.k_pages.at[:, :, ids, rows].set(kq),
+            v_pages=paged_c.v_pages.at[:, :, ids, rows].set(vq),
+            k_scale=paged_c.k_scale.at[:, :, ids, rows].set(ks),
+            v_scale=paged_c.v_scale.at[:, :, ids, rows].set(vs),
+        )
+    return attn_mod.PagedKvCache(
+        k_pages=paged_c.k_pages.at[:, :, ids, rows].set(
+            k.astype(paged_c.k_pages.dtype)
+        ),
+        v_pages=paged_c.v_pages.at[:, :, ids, rows].set(
+            v.astype(paged_c.v_pages.dtype)
+        ),
+    )
+
+
 # ---------------------------------------------------------------------------
 # block application
 # ---------------------------------------------------------------------------
 
 
 def _apply_block(params, bd: BlockDef, cfg: ModelConfig, x, *, mode: str,
-                 cache=None, index=None, cache_slots=None):
+                 cache=None, index=None, cache_slots=None,
+                 block_table=None, lengths=None):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = _norm(cfg, params["norm1"], x)
     new_cache = cache
     if bd.mixer == "attn":
         if mode == "decode":
-            decode_fn = (
-                kvquant.quant_decode_attention
-                if isinstance(cache, kvquant.QuantKvCache)
-                else attn_mod.decode_attention
-            )
-            m, new_cache = decode_fn(
-                params["attn"], h, cache, cfg.attn, index=index, window=bd.window
-            )
+            if isinstance(cache, _PAGED_CACHES):
+                paged_fn = (
+                    kvquant.quant_paged_decode_attention
+                    if isinstance(cache, kvquant.QuantPagedKvCache)
+                    else attn_mod.paged_decode_attention
+                )
+                m, new_cache = paged_fn(
+                    params["attn"], h, cache, cfg.attn, index=index,
+                    block_table=block_table, lengths=lengths, window=bd.window,
+                )
+            else:
+                decode_fn = (
+                    kvquant.quant_decode_attention
+                    if isinstance(cache, kvquant.QuantKvCache)
+                    else attn_mod.decode_attention
+                )
+                m, new_cache = decode_fn(
+                    params["attn"], h, cache, cfg.attn, index=index,
+                    window=bd.window,
+                )
         else:
             m = attn_mod.attention(
                 params["attn"], h, cfg.attn, window=bd.window, causal=True
@@ -288,7 +399,8 @@ def _kv_from_full(params, h, cfg: ModelConfig, bd: BlockDef, cache_slots=None):
 
 
 def _run_stage(params_stage, pattern, cfg: ModelConfig, x, *, mode, caches=None,
-               index=None, remat=False, cache_slots=None):
+               index=None, remat=False, cache_slots=None,
+               block_table=None, lengths=None):
     def super_block(carry, xs):
         x, aux = carry
         p_sb, cache_sb = xs
@@ -297,7 +409,8 @@ def _run_stage(params_stage, pattern, cfg: ModelConfig, x, *, mode, caches=None,
             c = cache_sb.get(f"b{j}") if cache_sb is not None else None
             x, nc, a = _apply_block(
                 p_sb[f"b{j}"], bd, cfg, x, mode=mode, cache=c, index=index,
-                cache_slots=cache_slots,
+                cache_slots=cache_slots, block_table=block_table,
+                lengths=lengths,
             )
             if nc is not None:
                 new_caches[f"b{j}"] = nc
@@ -397,12 +510,16 @@ def _ce(params, cfg: ModelConfig, x, labels):
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, frontend_embeds=None,
-            cache_slots: int | None = None):
+            cache_slots: int | None = None, logit_index=None):
     """Prefill: forward over the prompt -> (last_logits, caches).
 
     ``cache_slots`` sizes the decode ring buffers (defaults to the prompt
     length; pass the serving cache length to decode past the prompt with
-    full attention)."""
+    full attention).  ``logit_index`` (scalar or (batch,), traced) picks
+    which position's logits to return instead of the last — the hook
+    bucketed serving prefills use: right-pad the prompt to a shared
+    length bucket (one compile per bucket, not per prompt length) and
+    read the logits at the true last token."""
     x = _embed_inputs(params, cfg, tokens, frontend_embeds)
     caches = {}
     for i, (pattern, _) in enumerate(cfg.stages):
@@ -412,19 +529,35 @@ def prefill(params, cfg: ModelConfig, tokens, *, frontend_embeds=None,
         )
         caches[f"stage{i}"] = stage_cache
     x = _norm(cfg, params["final_norm"], x)
-    return _logits(params, cfg, x[:, -1:, :]), caches
+    if logit_index is None:
+        sel = x[:, -1:, :]
+    else:
+        li = jnp.asarray(logit_index, jnp.int32)
+        if li.ndim == 0:
+            li = jnp.broadcast_to(li[None], (x.shape[0],))
+        sel = jax.vmap(
+            lambda xi, ii: jax.lax.dynamic_slice_in_dim(xi, ii, 1, axis=0)
+        )(x, li)
+    return _logits(params, cfg, sel), caches
 
 
-def decode_step(params, cfg: ModelConfig, caches, tokens, index):
-    """One decode step.  tokens: (batch, 1); index: scalar absolute position.
+def decode_step(params, cfg: ModelConfig, caches, tokens, index, *,
+                block_table=None, lengths=None):
+    """One decode step (or a few — paged suffix prefills pass s_new > 1).
 
-    Returns (logits (batch, 1, vocab), updated caches)."""
+    tokens: (batch, s_new); index: absolute position of the first new
+    token (scalar, or (batch,) for ragged continuous batching).  Paged
+    caches additionally take the shared ``block_table`` (batch, pages)
+    and ``lengths`` (batch,) = valid tokens after this call's writes.
+
+    Returns (logits (batch, s_new, vocab), updated caches)."""
     x = _embed_inputs(params, cfg, tokens)
     new_caches = {}
     for i, (pattern, _) in enumerate(cfg.stages):
         x, _, stage_cache = _run_stage(
             params[f"stage{i}"], pattern, cfg, x,
             mode="decode", caches=caches[f"stage{i}"], index=index,
+            block_table=block_table, lengths=lengths,
         )
         new_caches[f"stage{i}"] = stage_cache
     x = _norm(cfg, params["final_norm"], x)

@@ -79,6 +79,114 @@ def init_cache(batch: int, slots: int, cfg: AttnConfig, dtype=jnp.bfloat16):
     )
 
 
+class PagedKvCache(NamedTuple):
+    """Page-pool KV cache: physical pages shared across sequences.
+
+    Position ``p`` of the sequence in batch slot ``b`` lives in page
+    ``block_table[b, p // page_size]`` at row ``p % page_size``; the
+    block table and per-sequence lengths are *not* part of the cache —
+    they are host-managed (``repro.serve``) and passed alongside, shared
+    by every layer (one allocation covers the whole stack).  Pages
+    referenced by several block tables (shared prefixes) exist once —
+    the serving-side multicast."""
+
+    k_pages: jax.Array  # (kv_heads, num_pages, page_size, head_dim)
+    v_pages: jax.Array
+
+
+def paged_cache_spec(num_pages: int, page_size: int, cfg: AttnConfig,
+                     dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return PagedKvCache(
+        k_pages=jax.ShapeDtypeStruct((kv, num_pages, page_size, hd), dtype),
+        v_pages=jax.ShapeDtypeStruct((kv, num_pages, page_size, hd), dtype),
+    )
+
+
+def init_paged_cache(num_pages: int, page_size: int, cfg: AttnConfig,
+                     dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return PagedKvCache(
+        k_pages=jnp.zeros((kv, num_pages, page_size, hd), dtype),
+        v_pages=jnp.zeros((kv, num_pages, page_size, hd), dtype),
+    )
+
+
+def paged_positions(x, index, lengths, page_size: int, n_entries: int):
+    """Shared prelude of the paged decode paths: absolute positions of
+    the ``s_new`` tokens plus their (page-table slot, in-page row)
+    write coordinates.  Positions at or past ``lengths`` (suffix-bucket
+    padding, inactive batch slots) are redirected to the **null page 0**
+    so a padded write can never land in a page some sequence owns.
+
+    Returns ``(positions (b, s_new), page_slot (b, s_new), row (b, s_new),
+    valid (b, s_new))`` — ``page_slot`` still needs the block-table
+    lookup (``take_along_axis``) to become a physical page id."""
+    b, s_new = x.shape[0], x.shape[1]
+    index = jnp.asarray(index)
+    if index.ndim == 0:
+        index = index[None]
+    positions = index[:, None] + jnp.arange(s_new)[None, :]
+    positions = jnp.broadcast_to(positions, (b, s_new)).astype(jnp.int32)
+    valid = (positions >= 0) & (positions < jnp.asarray(lengths)[:, None])
+    page_slot = jnp.clip(positions // page_size, 0, n_entries - 1)
+    row = jnp.where(valid, positions % page_size, 0)
+    return positions, page_slot, row, valid
+
+
+def paged_write(pages, values, page_ids, rows):
+    """Scatter new K/V rows into their pages: ``pages`` (kvh, P, ps, d),
+    ``values`` (b, s, kvh, d), ``page_ids``/``rows`` (b, s)."""
+    return pages.at[:, page_ids, rows].set(values.transpose(2, 0, 1, 3))
+
+
+def paged_decode_attention(
+    params,
+    x,
+    cache: PagedKvCache,
+    cfg: AttnConfig,
+    *,
+    index: jax.Array,
+    block_table: jax.Array,  # (b, pages_per_seq) int32
+    lengths: jax.Array,  # (b,) int32 — valid tokens AFTER this call's writes
+    window: int | None = None,
+):
+    """Decode (or prefix-hit suffix prefill) against the page pool.
+
+    ``x``: (b, s_new, d_model); ``index`` is the absolute position of
+    the first new token (scalar or (b,)).  The ``s_new`` new tokens are
+    written into their block-table pages first, then attention runs over
+    all ``lengths`` valid positions through the ``paged_attention``
+    kernel op (single-token calls dispatch to the pallas gather kernel
+    on TPU; multi-token suffix prefills run the reference gather).
+    """
+    if window is not None:
+        raise NotImplementedError(
+            "paged KV serving covers global attention only; local-window "
+            "blocks use the dense ring-buffer path"
+        )
+    ps = cache.k_pages.shape[2]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    positions, page_slot, rows, valid = paged_positions(
+        x, index, lengths, ps, block_table.shape[1]
+    )
+    q, k_new, v_new = _qkv(params, x, cfg, positions)
+    page_ids = jnp.where(
+        valid, jnp.take_along_axis(block_table, page_slot, axis=1), 0
+    )
+    k_pages = paged_write(
+        cache.k_pages, k_new.astype(cache.k_pages.dtype), page_ids, rows
+    )
+    v_pages = paged_write(
+        cache.v_pages, v_new.astype(cache.v_pages.dtype), page_ids, rows
+    )
+    o = kernels.op("paged_attention")(
+        q, k_pages, v_pages, block_table, positions[:, 0], lengths,
+        softcap=cfg.logit_softcap,
+    )
+    return _proj_out(params, o, cfg), PagedKvCache(k_pages=k_pages, v_pages=v_pages)
+
+
 def _qkv(params, x, cfg: AttnConfig, positions):
     q = proj_heads(x, params["wq"], params["bq"] if cfg.qkv_bias else None)
     k = proj_heads(x, params["wk"], params["bk"] if cfg.qkv_bias else None)

@@ -16,8 +16,16 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import kernels
 from repro.configs.base import AttnConfig
-from repro.nn.attention import KvCache, _attend, _proj_out, _qkv
+from repro.nn.attention import (
+    KvCache,
+    _attend,
+    _proj_out,
+    _qkv,
+    paged_positions,
+    paged_write,
+)
 
 
 class QuantKvCache(NamedTuple):
@@ -107,6 +115,69 @@ def quant_decode_attention(
         mask &= qp - kp < window
     o = _attend(q, k, v, mask, cfg)
     new_cache = QuantKvCache(k=kq, v=vq, k_scale=ks, v_scale=vs, pos=pos)
+    return _proj_out(params, o, cfg), new_cache
+
+
+class QuantPagedKvCache(NamedTuple):
+    """int8 page pool (`nn.attention.PagedKvCache` with per-(page, slot,
+    head) scales): halves the dominant decode HBM term for paged serving
+    too.  The reference paged-attention backend dequantises on gather."""
+
+    k_pages: jax.Array  # (kv_heads, num_pages, page_size, head_dim) int8
+    v_pages: jax.Array
+    k_scale: jax.Array  # (kv_heads, num_pages, page_size, 1) bf16
+    v_scale: jax.Array
+
+
+def init_quant_paged_cache(num_pages: int, page_size: int, cfg: AttnConfig):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return QuantPagedKvCache(
+        k_pages=jnp.zeros((kv, num_pages, page_size, hd), jnp.int8),
+        v_pages=jnp.zeros((kv, num_pages, page_size, hd), jnp.int8),
+        k_scale=jnp.zeros((kv, num_pages, page_size, 1), jnp.bfloat16),
+        v_scale=jnp.zeros((kv, num_pages, page_size, 1), jnp.bfloat16),
+    )
+
+
+def quant_paged_decode_attention(
+    params,
+    x,
+    cache: QuantPagedKvCache,
+    cfg: AttnConfig,
+    *,
+    index: jax.Array,
+    block_table: jax.Array,
+    lengths: jax.Array,
+    window: int | None = None,
+):
+    """`attention.paged_decode_attention` against int8 pages: new K/V
+    rows are quantised on the way in, the attention gather dequantises
+    on the way out (the reference backend's dequant hook)."""
+    if window is not None:
+        raise NotImplementedError(
+            "paged KV serving covers global attention only; local-window "
+            "blocks use the dense ring-buffer path"
+        )
+    ps = cache.k_pages.shape[2]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    positions, page_slot, rows, valid = paged_positions(
+        x, index, lengths, ps, block_table.shape[1]
+    )
+    q, k_new, v_new = _qkv(params, x, cfg, positions)
+    page_ids = jnp.where(
+        valid, jnp.take_along_axis(block_table, page_slot, axis=1), 0
+    )
+    kq_new, ks_new = quantize_kv(k_new)
+    vq_new, vs_new = quantize_kv(v_new)
+    kq = paged_write(cache.k_pages, kq_new, page_ids, rows)
+    vq = paged_write(cache.v_pages, vq_new, page_ids, rows)
+    ks = paged_write(cache.k_scale, ks_new, page_ids, rows)
+    vs = paged_write(cache.v_scale, vs_new, page_ids, rows)
+    o = kernels.op("paged_attention")(
+        q, kq, vq, block_table, positions[:, 0], lengths, ks, vs,
+        softcap=cfg.logit_softcap,
+    )
+    new_cache = QuantPagedKvCache(k_pages=kq, v_pages=vq, k_scale=ks, v_scale=vs)
     return _proj_out(params, o, cfg), new_cache
 
 

@@ -1,0 +1,18 @@
+"""Paged-KV serving subsystem: prefix-multicast KV sharing.
+
+``pagepool``  — refcounted page allocator (free list, COW, stats),
+``prefix``    — radix-tree prefix cache mapping token prefixes to shared
+                page chains (LRU eviction),
+``scheduler`` — admission / reclamation / preemption policy,
+``engine``    — the paged continuous-batching engine tying them to the
+                model layer and the ``paged_attention`` kernel op.
+"""
+from repro.serve.engine import (  # noqa: F401
+    PagedEngine,
+    Request,
+    bucket_len,
+    pad_to_bucket,
+)
+from repro.serve.pagepool import NULL_PAGE, PagePool, PoolStats  # noqa: F401
+from repro.serve.prefix import PrefixCache  # noqa: F401
+from repro.serve.scheduler import Scheduler  # noqa: F401

@@ -1,0 +1,402 @@
+"""Paged continuous-batching engine: the serving subsystem's mechanism.
+
+Owns the device side of paged serving and executes the
+:class:`~repro.serve.scheduler.Scheduler`'s policy decisions:
+
+* one **page pool per attention layer** (``lm.init_paged_cache``), all
+  indexed by host-managed block tables (one
+  :class:`~repro.serve.pagepool.PagePool` allocation covers the stack),
+* **prefix-multicast prefill**: a prompt is first matched against the
+  :class:`~repro.serve.prefix.PrefixCache`; matched pages are shared
+  (refcount bump — no compute, no copy) and only the divergent suffix
+  runs through the model, at its true positions, attending to the
+  shared pages.  Cold prompts run the exact dense-path ``lm.prefill``
+  and scatter into pages, so paged and dense serving produce identical
+  token streams (CI-diffed),
+* **bucketed compiles**: prompts/suffixes right-pad to shared length
+  buckets — one XLA program per bucket instead of one per prompt
+  length — with padded positions masked (dense) or redirected to the
+  null page (paged),
+* **decode page faults**: crossing a page boundary allocates on demand;
+  a dry pool first evicts cold prefix chains, then **preempts** the
+  youngest request by swapping its pages to host memory (bit-identical
+  restore on re-admission),
+* **copy-on-write**: a fork shares every page of its parent; the first
+  divergent write to a shared page gets a private copy
+  (``PagePool.cow`` + one device page copy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.nn import kvquant
+from repro.nn.attention import PagedKvCache
+from repro.serve.pagepool import PagePool
+from repro.serve.prefix import PrefixCache
+from repro.serve.scheduler import Scheduler
+
+_PAGED = (PagedKvCache, kvquant.QuantPagedKvCache)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    # preemption swap state: (host page-data tree, n_pages, length, last_tok)
+    _swap: tuple | None = dataclasses.field(default=None, repr=False)
+
+
+def bucket_len(n: int, bucket: int = 16) -> int:
+    """Round a prompt/suffix length up to its shared compile bucket."""
+    return max(bucket, math.ceil(n / bucket) * bucket)
+
+
+def pad_to_bucket(tokens, bucket: int = 16) -> np.ndarray:
+    """Right-pad a token list to its length bucket: (1, bucket_len)
+    int32 — one XLA prefill program per bucket, not per prompt length."""
+    out = np.zeros((1, bucket_len(len(tokens), bucket)), np.int32)
+    out[0, : len(tokens)] = tokens
+    return out
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    pages: list[int]  # page ids in block-table order (this slot's refs)
+    length: int  # valid tokens (prompt + generated context so far)
+    last_tok: int
+    admit_seq: int
+
+
+def _is_paged_leaf(x):
+    return isinstance(x, _PAGED)
+
+
+def _page_tree_map(fn, caches, *rest):
+    return jax.tree.map(fn, caches, *rest, is_leaf=_is_paged_leaf)
+
+
+class PagedEngine:
+    """Continuous-batching server over the paged KV subsystem.
+
+    Same ``run(requests)`` surface as the dense ``launch.serve.Server``
+    fallback; requires an all-attention, global-window architecture
+    (``lm.init_paged_cache`` enforces this)."""
+
+    def __init__(self, cfg, params, *, max_batch: int = 4, cache_len: int = 256,
+                 page_size: int = 16, num_pages: int | None = None,
+                 kv_dtype: str = "bf16", watermark: int = 2,
+                 prompt_bucket: int = 16):
+        if cache_len % page_size:
+            raise ValueError("cache_len must be a multiple of page_size")
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.page_size = page_size
+        self.table_width = cache_len // page_size
+        self.cache_len = cache_len
+        self.prompt_bucket = prompt_bucket
+        if num_pages is None:
+            # the dense fallback's footprint: one full-length cache per
+            # batch slot, plus the null page
+            num_pages = 1 + max_batch * self.table_width
+        self.pool = PagePool(num_pages, page_size)
+        self.prefix = PrefixCache(self.pool, page_size)
+        self.sched = Scheduler(self.pool, self.prefix, watermark=watermark)
+        self.caches = lm.init_paged_cache(cfg, num_pages, page_size, kv_dtype)
+        self.slots: dict[int, _Slot] = {}
+        self._admit_seq = 0
+        self._requeue: list[Request] = []  # preempted, waiting to swap in
+        self.n_preempted = 0
+        self.n_cow = 0
+
+        # every jit that rewrites the page pools donates the cache
+        # buffers: the engine always replaces self.caches with the
+        # result, so XLA may update the (potentially large) pools in
+        # place instead of copying them per call (a no-op on CPU)
+        self._decode = jax.jit(
+            lambda p, c, t, i, bt, ln: lm.decode_step(
+                p, cfg, c, t, i, block_table=bt, lengths=ln
+            ),
+            donate_argnums=(1,),
+        )
+
+        def cold_prefill(p, caches, toks, li, table_row, length):
+            logits, dense = lm.prefill(p, cfg, toks, logit_index=li)
+            return logits, lm.prefill_to_pages(dense, caches, table_row, length)
+
+        self._cold_prefill = jax.jit(cold_prefill, donate_argnums=(1,))
+
+        def suffix_prefill(p, caches, toks, li, table, index, length):
+            logits, new_caches = lm.decode_step(
+                p, cfg, caches, toks, index, block_table=table, lengths=length
+            )
+            sel = jax.lax.dynamic_slice_in_dim(logits, li, 1, axis=1)
+            return sel, new_caches
+
+        self._suffix_prefill = jax.jit(suffix_prefill, donate_argnums=(1,))
+
+        def copy_page(caches, src, dst):
+            return _page_tree_map(
+                lambda c: type(c)(
+                    *[a.at[:, :, dst].set(a[:, :, src]) for a in c]
+                ),
+                caches,
+            )
+
+        self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
+        self._gather_pages = jax.jit(
+            lambda caches, ids: _page_tree_map(
+                lambda c: type(c)(*[a[:, :, ids] for a in c]), caches
+            )
+        )
+        self._scatter_pages = jax.jit(
+            lambda caches, ids, data: _page_tree_map(
+                lambda c, d: type(c)(
+                    *[a.at[:, :, ids].set(b) for a, b in zip(c, d)]
+                ),
+                caches, data,
+            ),
+            donate_argnums=(0,),
+        )
+
+    # -- host bookkeeping ---------------------------------------------------
+    def _free_slot(self) -> int | None:
+        for s in range(self.max_batch):
+            if s not in self.slots:
+                return s
+        return None
+
+    def _table_row(self, pages: list[int]) -> np.ndarray:
+        row = np.zeros(self.table_width, np.int32)
+        row[: len(pages)] = pages
+        return row
+
+    def _pages_ids_fixed(self, pages: list[int]) -> jnp.ndarray:
+        """Fixed-width page-id vector (padded with the null page) so the
+        swap gather/scatter jits compile once, not once per page count."""
+        return jnp.asarray(self._table_row(pages))
+
+    # -- admission ----------------------------------------------------------
+    def _admit(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        if req._swap is not None:
+            return self._swap_in(slot, req)
+        prompt = req.prompt
+        if len(prompt) + req.max_new + 1 > self.cache_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new exceeds cache_len "
+                f"{self.cache_len}"
+            )
+        # match BEFORE the watermark check: the refs it takes pin the
+        # chain against can_admit's prefix eviction; a rejected
+        # admission fully unwinds it (refs and stats)
+        shared, n_matched = self.prefix.match(prompt)
+        fresh_needed = self.sched.pages_for(len(prompt) + 1) - len(shared)
+        if not self.sched.can_admit(fresh_needed):
+            self.prefix.unmatch(shared, len(prompt))
+            return False
+        fresh = self.pool.alloc(fresh_needed)
+        assert fresh is not None  # can_admit just checked
+        pages = shared + fresh
+        table_row = jnp.asarray(self._table_row(pages))
+
+        if n_matched == 0:
+            # cold prompt: the dense path's own prefill, scattered into
+            # pages — bit-identical bytes to the dense fallback
+            toks = pad_to_bucket(prompt, self.prompt_bucket)
+            logits, self.caches = self._cold_prefill(
+                self.params, self.caches, jnp.asarray(toks),
+                jnp.int32(len(prompt) - 1), table_row, jnp.int32(len(prompt)),
+            )
+        else:
+            # prefix hit: the shared pages are "multicast" to this
+            # request (refcount bump, zero compute) — only the divergent
+            # suffix runs, attending to the shared pages at its true
+            # positions
+            suffix = prompt[n_matched:]
+            toks = pad_to_bucket(suffix, self.prompt_bucket)
+            logits, self.caches = self._suffix_prefill(
+                self.params, self.caches, jnp.asarray(toks),
+                jnp.int32(len(suffix) - 1), table_row[None],
+                jnp.asarray([n_matched], jnp.int32),
+                jnp.asarray([len(prompt)], jnp.int32),
+            )
+        last = int(jnp.argmax(logits[0, -1]))
+        self.prefix.insert(prompt, pages)
+        self.slots[slot] = _Slot(
+            req=req, pages=pages, length=len(prompt), last_tok=last,
+            admit_seq=self._admit_seq,
+        )
+        self._admit_seq += 1
+        req.out.append(last)
+        return True
+
+    # -- preemption (swap to host) and resume -------------------------------
+    def _preempt(self, slot: int) -> None:
+        st = self.slots.pop(slot)
+        ids = self._pages_ids_fixed(st.pages)
+        data = jax.device_get(self._gather_pages(self.caches, ids))
+        st.req._swap = (data, len(st.pages), st.length, st.last_tok)
+        self.pool.release(st.pages)
+        self._requeue.append(st.req)
+        self.n_preempted += 1
+
+    def _swap_in(self, slot: int, req: Request) -> bool:
+        data, n_pages, length, last_tok = req._swap
+        if not self.sched.can_admit(n_pages):
+            return False
+        pages = self.pool.alloc(n_pages)
+        assert pages is not None
+        ids = self._pages_ids_fixed(pages)
+        self.caches = self._scatter_pages(self.caches, ids, data)
+        req._swap = None
+        self.slots[slot] = _Slot(
+            req=req, pages=pages, length=length, last_tok=last_tok,
+            admit_seq=self._admit_seq,
+        )
+        self._admit_seq += 1
+        return True
+
+    def _pick_victim(self, exclude: set[int] = frozenset()) -> int | None:
+        order = sorted(
+            (s for s in self.slots if s not in exclude),
+            key=lambda s: self.slots[s].admit_seq,
+        )
+        return self.sched.pick_victim(order)
+
+    # -- copy-on-write / fork ----------------------------------------------
+    def fork(self, slot: int, req: Request) -> int | None:
+        """Fork a running request: the child shares *every* page of the
+        parent (one refcount bump per page — no copies); the next write
+        to the shared tail page copy-on-writes.  Returns the child slot."""
+        child_slot = self._free_slot()
+        if child_slot is None:
+            return None
+        st = self.slots[slot]
+        self.pool.share(st.pages)
+        self.slots[child_slot] = _Slot(
+            req=req, pages=list(st.pages), length=st.length,
+            last_tok=st.last_tok, admit_seq=self._admit_seq,
+        )
+        self._admit_seq += 1
+        req.out.extend(st.req.out)
+        return child_slot
+
+    def _alloc_for_decode(self, n: int, *, exclude: set[int]) -> list[int] | None:
+        """Allocate decode pages, escalating: free list -> prefix
+        eviction -> preemption of the youngest request not in
+        ``exclude`` (a slot never preempts itself — progress)."""
+        while True:
+            if self.sched.reclaim(n):
+                return self.pool.alloc(n)
+            victim = self._pick_victim(exclude)
+            if victim is None:
+                return None
+            self._preempt(victim)
+
+    def _ensure_writable(self, slot: int) -> None:
+        """Before a decode step writes position ``length``: make sure the
+        covering page exists in the slot's table and is exclusively
+        owned (COW)."""
+        st = self.slots[slot]
+        need = st.length // self.page_size
+        if need >= self.table_width:
+            raise RuntimeError(f"request {st.req.rid} overran cache_len")
+        if need >= len(st.pages):
+            got = self._alloc_for_decode(1, exclude={slot})
+            if got is None:
+                raise RuntimeError(
+                    "page pool exhausted with nothing left to evict or "
+                    "preempt — size the pool for at least one full request"
+                )
+            st.pages.extend(got)
+        elif self.pool.refcount(st.pages[need]) > 1:
+            res = self.pool.cow(st.pages[need])
+            if res is None:  # pool dry: make room, then retry the COW
+                got = self._alloc_for_decode(1, exclude={slot})
+                if got is None:
+                    raise RuntimeError("page pool exhausted during COW")
+                self.pool.release(got)
+                res = self.pool.cow(st.pages[need])
+                assert res is not None
+            new_id, copied = res
+            if copied:
+                self.caches = self._copy_page(
+                    self.caches, jnp.int32(st.pages[need]), jnp.int32(new_id)
+                )
+                self.n_cow += 1
+            st.pages[need] = new_id
+
+    # -- main loop ----------------------------------------------------------
+    def step(self) -> list[Request]:
+        """One decode step over the active batch; returns finished requests."""
+        for slot in sorted(self.slots, key=lambda s: self.slots[s].admit_seq):
+            if slot in self.slots:  # a page fault may preempt later slots
+                self._ensure_writable(slot)
+        if not self.slots:
+            return []
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        index = np.zeros(self.max_batch, np.int32)
+        lengths = np.zeros(self.max_batch, np.int32)
+        table = np.zeros((self.max_batch, self.table_width), np.int32)
+        for slot, st in self.slots.items():
+            toks[slot, 0] = st.last_tok
+            index[slot] = st.length
+            lengths[slot] = st.length + 1
+            table[slot] = self._table_row(st.pages)
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray(index),
+            jnp.asarray(table), jnp.asarray(lengths),
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        finished = []
+        for slot, st in list(self.slots.items()):
+            st.length += 1
+            st.last_tok = int(nxt[slot])
+            st.req.out.append(st.last_tok)
+            if len(st.req.out) >= st.req.max_new:
+                finished.append(st.req)
+                self.pool.release(st.pages)
+                del self.slots[slot]
+        return finished
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        queue = list(requests)
+        done: list[Request] = []
+        while queue or self.slots or self._requeue:
+            if self._requeue:  # preempted requests re-enter at the front
+                queue = self._requeue + queue
+                self._requeue = []
+            while queue and self._admit(queue[0]):
+                queue.pop(0)
+            if not self.slots:
+                if queue:
+                    raise RuntimeError(
+                        "pool too small to admit any queued request"
+                    )
+                continue
+            done.extend(self.step())
+        return done
+
+    # -- introspection ------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "pool": dataclasses.asdict(self.pool.stats),
+            "free_pages": self.pool.free_pages,
+            "prefix_pages": len(self.prefix),
+            "prefix_hit_tokens": self.prefix.hit_tokens,
+            "prefix_miss_tokens": self.prefix.miss_tokens,
+            "preempted": self.n_preempted,
+            "cow_copies": self.n_cow,
+        }

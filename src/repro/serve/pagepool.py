@@ -1,0 +1,134 @@
+"""Refcounted page pool — the serving-side multicast fabric.
+
+The paper's crossbar fetches a shared operand once and delivers it to N
+consumers; the serving equivalent is a KV-cache *page* written once and
+referenced by every request that shares the prefix it covers.  This
+module is the host-side allocator for those pages: a fixed pool of
+page-granular KV blocks with
+
+* **free-list allocation** (O(1) alloc/free, all-or-nothing grants so a
+  half-admitted request can never wedge the pool),
+* **refcounting** (a page is "multicast" to N requests by incrementing
+  its refcount N times — the fanout mask of the analogy; the physical
+  KV bytes exist once), and
+* **copy-on-write** (:meth:`cow`): a writer that does not own a page
+  exclusively gets a fresh page id and the caller copies the device
+  bytes — divergence after a shared prefix never corrupts the other
+  readers.
+
+The pool manages *ids only*; the KV bytes live in the device-side page
+arrays (``nn.attention.PagedKvCache``), indexed by these ids.  One id
+addresses the same physical page index in **every** layer's pool (the
+standard block-table design), so allocation happens once per page, not
+once per layer.
+
+Page ``0`` is reserved as the **null page**: the device write path
+redirects out-of-range / padded-position writes there, so it is never
+granted to a request and its contents are garbage by design.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+NULL_PAGE = 0
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """Cumulative counters + high-water mark.  ``shared`` counts
+    *committed* multicast fanout: a rejected admission's probe is
+    reversed by ``PrefixCache.unmatch``."""
+
+    allocated: int = 0  # pages granted by alloc()
+    shared: int = 0  # refcount increments via share() (multicast fanout)
+    freed: int = 0  # pages returned to the free list
+    cow_copies: int = 0  # copy-on-write page duplications
+    peak_in_use: int = 0
+
+
+class PagePool:
+    """Fixed pool of ``num_pages`` page ids, each covering ``page_size``
+    token positions in every layer's device page array."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is the null page)")
+        if page_size < 1:
+            raise ValueError("page_size must be positive")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self._ref = [0] * self.num_pages
+        self._free: deque[int] = deque(range(1, self.num_pages))
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        """Pages currently referenced (excludes the null page)."""
+        return self.num_pages - 1 - len(self._free)
+
+    def refcount(self, page_id: int) -> int:
+        return self._ref[page_id]
+
+    # ------------------------------------------------------------------
+    def alloc(self, n: int) -> list[int] | None:
+        """Grant ``n`` fresh pages (refcount 1 each), or ``None`` if the
+        pool cannot satisfy the whole request (all-or-nothing)."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        ids = [self._free.popleft() for _ in range(n)]
+        for pid in ids:
+            self._ref[pid] = 1
+        self.stats.allocated += n
+        self.stats.peak_in_use = max(self.stats.peak_in_use, self.in_use)
+        return ids
+
+    def share(self, page_ids: list[int]) -> None:
+        """Add one reference per page — the multicast fanout increment."""
+        for pid in page_ids:
+            if self._ref[pid] <= 0:
+                raise ValueError(f"share of unreferenced page {pid}")
+            self._ref[pid] += 1
+        self.stats.shared += len(page_ids)
+
+    def release(self, page_ids: list[int]) -> list[int]:
+        """Drop one reference per page; returns the ids that hit
+        refcount 0 and went back on the free list."""
+        freed = []
+        for pid in page_ids:
+            if pid == NULL_PAGE:
+                raise ValueError("release of the null page")
+            if self._ref[pid] <= 0:
+                raise ValueError(f"release of unreferenced page {pid}")
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                self._free.append(pid)
+                freed.append(pid)
+        self.stats.freed += len(freed)
+        return freed
+
+    def cow(self, page_id: int) -> tuple[int, bool] | None:
+        """Copy-on-write: make ``page_id`` exclusively owned by the caller.
+
+        Returns ``(page_id, False)`` when the caller already owns it
+        exclusively (refcount 1 — no copy needed), ``(new_id, True)``
+        when the page was shared (the caller must copy the device bytes
+        ``new_id <- page_id`` and use ``new_id`` from now on; the old
+        reference is released), or ``None`` when the pool is dry."""
+        if self._ref[page_id] <= 0:
+            raise ValueError(f"cow of unreferenced page {page_id}")
+        if self._ref[page_id] == 1:
+            return page_id, False
+        granted = self.alloc(1)
+        if granted is None:
+            return None
+        self.release([page_id])
+        self.stats.cow_copies += 1
+        return granted[0], True

@@ -1,0 +1,180 @@
+"""Radix-tree prefix cache: token prefixes -> shared page chains.
+
+A prefilled prefix is "multicast" to later requests the way the paper's
+crossbar multicasts an operand: the KV pages covering it are computed
+and stored **once**, and every request whose prompt starts with the same
+tokens gets the same page ids with one refcount bump per consumer
+(:class:`~repro.serve.pagepool.PagePool` is the fanout mask).  A
+cache-hit prefill then runs the model only over the divergent suffix.
+
+Structure: one tree node per **page** (``page_size`` tokens); a node's
+edge key is the exact token tuple its page covers, so lookup is an
+O(pages) dict walk and two prompts share a chain iff they share full
+pages.  Page granularity (vs. per-token radix splits) keeps the tree in
+lockstep with the pool — a node *is* a page, so sharing, refcounts and
+eviction all operate on the same unit the device kernels index by.
+
+The tree holds **one reference of its own** on every cached page, so a
+chain outlives the request that built it.  Eviction is LRU over leaf
+nodes whose page the tree is the *last* holder of (pool refcount 1):
+releasing an interior node would orphan its descendants, and releasing
+a page some request still reads would corrupt it — both are excluded
+structurally.
+
+Matching is capped at ``(len(tokens) - 1) // page_size`` pages: the page
+containing a prompt's final token is never shared even when the prompt
+length is page-aligned, so every admission prefills at least one token
+(the model must produce last-token logits) and the decode-written page
+is never a tree page.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Iterable, Sequence
+
+from repro.serve.pagepool import PagePool
+
+
+class _Node:
+    __slots__ = ("key", "page_id", "parent", "children", "tick")
+
+    def __init__(self, key, page_id, parent):
+        self.key = key  # token tuple covering this page (() for the root)
+        self.page_id = page_id  # pool page id (None for the root)
+        self.parent = parent
+        self.children: dict[tuple, _Node] = {}
+        self.tick = 0  # last-touched counter for LRU
+
+
+class PrefixCache:
+    def __init__(self, pool: PagePool, page_size: int | None = None):
+        self.pool = pool
+        self.page_size = int(page_size or pool.page_size)
+        self.root = _Node((), None, None)
+        self._tick = 0
+        self.hit_tokens = 0  # prefill tokens skipped via matches
+        self.miss_tokens = 0  # prefill tokens actually computed
+
+    # ------------------------------------------------------------------
+    def _touch(self, node: _Node) -> None:
+        self._tick += 1
+        # refresh the whole chain: an interior page is at least as
+        # recently useful as the deepest leaf that just used it
+        while node is not self.root:
+            node.tick = self._tick
+            node = node.parent
+
+    def _pages(self, tokens: Sequence[int], n_pages: int) -> Iterable[tuple]:
+        ps = self.page_size
+        for i in range(n_pages):
+            yield tuple(tokens[i * ps : (i + 1) * ps])
+
+    # ------------------------------------------------------------------
+    def match(self, tokens: Sequence[int]) -> tuple[list[int], int]:
+        """Longest cached page chain covering a proper prefix of
+        ``tokens``.  Returns ``(page_ids, n_matched_tokens)`` and takes
+        **one reference per matched page for the caller** (release them
+        via the pool when the request retires or admission aborts)."""
+        cap = max(0, (len(tokens) - 1) // self.page_size)
+        node, out = self.root, []
+        for key in self._pages(tokens, cap):
+            child = node.children.get(key)
+            if child is None:
+                break
+            out.append(child.page_id)
+            node = child
+        if out:
+            self._touch(node)
+            self.pool.share(out)
+        matched = len(out) * self.page_size
+        self.hit_tokens += matched
+        self.miss_tokens += len(tokens) - matched
+        return out, matched
+
+    def unmatch(self, page_ids: list[int], n_tokens: int) -> None:
+        """Abort path of :meth:`match` (admission rejected): release the
+        caller refs *and* reverse the hit/share accounting, so a request
+        that waits in the queue and re-probes every scheduling round
+        doesn't inflate the multicast stats while receiving nothing."""
+        self.pool.release(page_ids)
+        self.pool.stats.shared -= len(page_ids)
+        matched = len(page_ids) * self.page_size
+        self.hit_tokens -= matched
+        self.miss_tokens -= n_tokens - matched
+
+    def insert(self, tokens: Sequence[int], page_ids: Sequence[int]) -> int:
+        """Register the full pages of a prefilled prompt (``page_ids[i]``
+        holds tokens ``[i*ps, (i+1)*ps)``).  The tree takes one reference
+        of its own per newly cached page; pages already cached keep the
+        existing copy (first writer wins — both copies are identical by
+        construction).  Returns the number of pages newly inserted."""
+        node, new = self.root, 0
+        for i, key in enumerate(self._pages(tokens, len(tokens) // self.page_size)):
+            child = node.children.get(key)
+            if child is None:
+                self.pool.share([page_ids[i]])  # the tree's own reference
+                child = _Node(key, page_ids[i], node)
+                node.children[key] = child
+                new += 1
+            node = child
+        if node is not self.root:
+            self._touch(node)
+        return new
+
+    # ------------------------------------------------------------------
+    def _nodes(self) -> list[_Node]:
+        out, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            out.extend(n.children.values())
+            stack.extend(n.children.values())
+        return out
+
+    def __len__(self) -> int:
+        """Number of cached pages."""
+        return len(self._nodes())
+
+    def evictable_pages(self) -> int:
+        """How many pages :meth:`evict` could free right now: the union
+        of fully refcount-1 subtrees (a refcount-1 node pinned by a
+        shared descendant is structurally unevictable).  Lets callers
+        test feasibility *before* destroying cached chains."""
+        def walk(node: _Node) -> tuple[int, bool]:
+            cnt, full = 0, True
+            for child in node.children.values():
+                sub, sub_full = walk(child)
+                cnt += sub
+                full = full and sub_full
+            if node is self.root:
+                return cnt, False
+            if full and self.pool.refcount(node.page_id) == 1:
+                return cnt + 1, True
+            return cnt, False
+
+        return walk(self.root)[0]
+
+    def evict(self, n_pages: int) -> int:
+        """Release up to ``n_pages`` LRU refcount-1 chains back to the
+        pool (leaf-first, cascading to parents as they become evictable
+        leaves).  Returns how many pages were actually freed.
+
+        One tree walk seeds an LRU heap of evictable leaves; a removed
+        node's parent joins the heap incrementally — the whole call is
+        O(tree + freed·log tree), and it sits on the admission /
+        decode-page-fault path."""
+        heap = [
+            (n.tick, id(n), n) for n in self._nodes()
+            if not n.children and self.pool.refcount(n.page_id) == 1
+        ]
+        heapq.heapify(heap)
+        freed = 0
+        while freed < n_pages and heap:
+            _, _, victim = heapq.heappop(heap)
+            self.pool.release([victim.page_id])
+            del victim.parent.children[victim.key]
+            freed += 1
+            parent = victim.parent
+            if (parent is not self.root and not parent.children
+                    and self.pool.refcount(parent.page_id) == 1):
+                heapq.heappush(heap, (parent.tick, id(parent), parent))
+        return freed

@@ -1,0 +1,71 @@
+"""Continuous-batching scheduler policy (host-side, pure decisions).
+
+Separates the *policy* — who gets admitted, who gets preempted, when
+cached prefixes get evicted — from the *mechanism* (device writes,
+page bookkeeping) in :mod:`repro.serve.engine`:
+
+* **Admission by free-page watermark**: a queued request is admitted
+  only if its new-page demand leaves at least ``watermark`` pages free.
+  The watermark is headroom for the *running* batch's decode growth, so
+  admitting a long prompt can't starve next step's decode — decode
+  priority expressed as a reservation rather than an ordering.
+* **Decode-priority reclamation**: when a decode step needs a page and
+  the pool is dry, free capacity is taken first from the prefix cache
+  (LRU refcount-1 chains — cached but currently unused data), and only
+  then from a running request via preemption.
+* **Preemption pick**: youngest-admitted request first (LIFO), so the
+  requests that have already burned the most decode compute are the
+  last to lose their pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.serve.pagepool import PagePool
+from repro.serve.prefix import PrefixCache
+
+
+@dataclasses.dataclass
+class Scheduler:
+    pool: PagePool
+    prefix: PrefixCache | None = None
+    watermark: int = 2  # pages kept free after any admission
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages covering ``n_tokens`` positions."""
+        return math.ceil(n_tokens / self.pool.page_size)
+
+    # ------------------------------------------------------------------
+    def _evict_for(self, deficit: int) -> bool:
+        """Evict cached prefix chains to cover ``deficit`` pages — but
+        only when eviction can actually cover it: a demand that cannot
+        succeed must not destroy the prefix cache as a side effect (it
+        would be re-probed every scheduling round)."""
+        if deficit <= 0:
+            return True
+        if self.prefix is None or self.prefix.evictable_pages() < deficit:
+            return False
+        self.prefix.evict(deficit)
+        return True
+
+    def can_admit(self, new_pages: int) -> bool:
+        """Watermark admission test (``new_pages`` = pages the request
+        needs *beyond* what prefix sharing already covers).  Evicts
+        cold prefix chains first if — and only if — that unblocks the
+        admission."""
+        self._evict_for(new_pages + self.watermark - self.pool.free_pages)
+        return self.pool.free_pages - new_pages >= self.watermark
+
+    def reclaim(self, n_pages: int) -> bool:
+        """Make ``n_pages`` free for a *running* request (decode page
+        fault / COW): prefix eviction only — preemption is the caller's
+        escalation.  Returns True when the pages are available."""
+        self._evict_for(n_pages - self.pool.free_pages)
+        return self.pool.free_pages >= n_pages
+
+    def pick_victim(self, slots_by_admit_order: Sequence[int]) -> int | None:
+        """Preemption victim among running slots (admission order,
+        oldest first): the youngest loses its pages."""
+        return slots_by_admit_order[-1] if slots_by_admit_order else None

@@ -403,9 +403,14 @@ def _fake_op():
 def test_resolve_reports_vjp_capability():
     res = kernels.resolve("matmul", (256, 128, 128), jnp.float32, policy="tiled")
     assert res.vjp is True and res.schedule == "tiled"
-    # every registered schedule of the four real families carries a VJP
+    # every registered training-path schedule carries a VJP; the one
+    # deliberate exception is the paged_attention decode kernel, which
+    # is serving-only (nothing differentiates through a decode step)
     for op_name in kernels.ops():
         for sched in api.op(op_name).schedules:
+            if op_name == "paged_attention" and sched.backend == "pallas":
+                assert not sched.vjp, (op_name, sched.name)
+                continue
             assert sched.vjp, (op_name, sched.name)
 
 

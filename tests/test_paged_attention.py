@@ -1,0 +1,267 @@
+"""paged_attention kernel-op tests: reference-vs-pallas parity (GQA,
+ragged page tails), dispatch resolution, dequant-on-gather, and
+nn-level equivalence with the dense ring-buffer decode path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kernels
+from repro.configs.base import AttnConfig
+from repro.kernels.paged_attention import (
+    gather_pages,
+    paged_attention_decode,
+    paged_attention_ref,
+)
+from repro.nn import attention as attn
+from repro.nn import kvquant
+from repro.nn.spec import init_params
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _setup(b=3, h=4, kvh=2, d=16, ps=8, num_pages=16, width=4, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (kvh, num_pages, ps, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (kvh, num_pages, ps, d), jnp.float32)
+    # distinct pages per sequence, null-page padding in the tail
+    table = jnp.array(
+        [[1, 2, 3, 4], [5, 6, 7, 0], [8, 9, 0, 0]][:b], jnp.int32
+    )[:, :width]
+    lengths = jnp.array([29, 23, 9][:b], jnp.int32)  # ragged tails
+    return q, kp, vp, table, lengths
+
+
+@pytest.mark.parametrize("kvh", [1, 2, 4])  # MQA / GQA / MHA
+def test_kernel_matches_reference_gqa(kvh):
+    q, kp, vp, table, lengths = _setup(kvh=4)
+    kp, vp = kp[:kvh], vp[:kvh]
+    ref = paged_attention_ref(q, kp, vp, table, lengths - 1, lengths)
+    got = paged_attention_decode(
+        q[:, 0], kp, vp, table, lengths - 1, lengths, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref[:, 0]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_kernel_ragged_tail_and_softcap():
+    q, kp, vp, table, lengths = _setup()
+    lengths = jnp.array([25, 17, 1], jnp.int32)  # incl. a 1-token sequence
+    ref = paged_attention_ref(q, kp, vp, table, lengths - 1, lengths, softcap=8.0)
+    got = paged_attention_decode(
+        q[:, 0], kp, vp, table, lengths - 1, lengths, softcap=8.0, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref[:, 0]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_gather_pages_layout():
+    kp = jnp.arange(2 * 4 * 3 * 2, dtype=jnp.float32).reshape(2, 4, 3, 2)
+    table = jnp.array([[2, 0], [1, 3]], jnp.int32)
+    g = gather_pages(kp, table)
+    assert g.shape == (2, 6, 2, 2)  # (b, n*ps, kvh, d)
+    np.testing.assert_array_equal(np.asarray(g[0, 0, 0]), np.asarray(kp[0, 2, 0]))
+    np.testing.assert_array_equal(np.asarray(g[1, 4, 1], ), np.asarray(kp[1, 3, 1]))
+
+
+def test_multi_token_reference_matches_contiguous_attention():
+    """A bucket-padded suffix 'prefill' through the paged reference must
+    equal ordinary causal attention over the contiguous sequence."""
+    b, h, kvh, d, ps = 1, 4, 2, 16, 8
+    total, start_pos, s_pad = 21, 16, 8  # 5 true suffix tokens, padded to 8
+    ks = jax.random.split(KEY, 3)
+    k_all = jax.random.normal(ks[0], (b, total, kvh, d), jnp.float32)
+    v_all = jax.random.normal(ks[1], (b, total, kvh, d), jnp.float32)
+    q_suf = jax.random.normal(ks[2], (b, s_pad, h, d), jnp.float32)
+
+    # pages 1..3 hold the contiguous sequence (ragged tail in page 3)
+    kp = jnp.zeros((kvh, 8, ps, d), jnp.float32)
+    vp = jnp.zeros((kvh, 8, ps, d), jnp.float32)
+    pad = jnp.pad(k_all, ((0, 0), (0, 24 - total), (0, 0), (0, 0)))
+    kp = kp.at[:, 1:4].set(pad[0].transpose(1, 0, 2).reshape(kvh, 3, ps, d))
+    pad_v = jnp.pad(v_all, ((0, 0), (0, 24 - total), (0, 0), (0, 0)))
+    vp = vp.at[:, 1:4].set(pad_v[0].transpose(1, 0, 2).reshape(kvh, 3, ps, d))
+
+    table = jnp.array([[1, 2, 3]], jnp.int32)
+    start = jnp.array([start_pos], jnp.int32)
+    lengths = jnp.array([total], jnp.int32)
+    got = paged_attention_ref(q_suf, kp, vp, table, start, lengths)
+
+    # oracle: dense masked attention over the contiguous k/v
+    g = h // kvh
+    q5 = q_suf.reshape(b, s_pad, kvh, g, d)
+    logits = jnp.einsum("bskgh,btkh->bkgst", q5, k_all).astype(jnp.float32)
+    logits = logits / np.sqrt(d)
+    qp = start_pos + jnp.arange(s_pad)
+    mask = jnp.arange(total)[None, :] <= qp[:, None]
+    logits = jnp.where(mask[None, None, None], logits, -2.0**30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_all.dtype)
+    want = jnp.einsum("bkgst,btkh->bskgh", probs, v_all).reshape(b, s_pad, h, d)
+
+    # only the 5 true suffix rows are meaningful (padded rows discarded)
+    np.testing.assert_allclose(
+        np.asarray(got[:, :5]), np.asarray(want[:, :5]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_dispatch_resolution():
+    shape1 = (3, 1, 4, 2, 4, 8, 16, 0)
+    r = kernels.resolve("paged_attention", shape1, jnp.float32)
+    assert r.backend == "reference"  # off-TPU default
+    r = kernels.resolve("paged_attention", shape1, jnp.float32, policy="pallas")
+    assert r.schedule == "pallas" and not r.vjp
+    # multi-token (suffix prefill) and int8-scale calls auto-dispatch to
+    # the reference gather even under backend=pallas-preferring default
+    for shape in [(3, 8, 4, 2, 4, 8, 16, 0), (3, 1, 4, 2, 4, 8, 16, 2)]:
+        sched, _ = kernels.op("paged_attention").resolve(
+            kernels.Problem(shape, "float32"),
+            kernels.DispatchPolicy(),
+        )
+        assert not (sched.backend == "pallas" and sched.available(
+            kernels.Problem(shape, "float32")
+        ))
+
+
+def test_forced_pallas_rejects_unsupported_calls_clearly():
+    q, kp, vp, table, lengths = _setup()
+    kq, ks = kvquant.quantize_kv(kp)
+    vq, vs = kvquant.quantize_kv(vp)
+    with pytest.raises(ValueError, match="dequant scales"):
+        kernels.op("paged_attention")(
+            q, kq, vq, table, lengths - 1, lengths, ks, vs, policy="pallas"
+        )
+    q8 = jnp.broadcast_to(q, (q.shape[0], 8, *q.shape[2:]))
+    with pytest.raises(ValueError, match="query tokens"):
+        kernels.op("paged_attention")(
+            q8, kp, vp, table, lengths - 8, lengths, policy="pallas"
+        )
+
+
+def test_registry_call_matches_direct_reference():
+    q, kp, vp, table, lengths = _setup()
+    want = paged_attention_ref(q, kp, vp, table, lengths - 1, lengths)
+    got = kernels.op("paged_attention")(q, kp, vp, table, lengths - 1, lengths)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    forced = kernels.op("paged_attention")(
+        q, kp, vp, table, lengths - 1, lengths, policy="pallas"
+    )
+    np.testing.assert_allclose(
+        np.asarray(forced), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_dequant_on_gather_matches_dequantized_pages():
+    q, kp, vp, table, lengths = _setup()
+    kq, ks = kvquant.quantize_kv(kp)
+    vq, vs = kvquant.quantize_kv(vp)
+    got = paged_attention_ref(
+        q, kq, vq, table, lengths - 1, lengths, k_scale=ks, v_scale=vs
+    )
+    want = paged_attention_ref(
+        q, kvquant.dequantize_kv(kq, ks), kvquant.dequantize_kv(vq, vs),
+        table, lengths - 1, lengths,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=1e-2, atol=1e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# nn-level: paged vs. dense ring-buffer decode
+# ---------------------------------------------------------------------------
+
+
+def _attn_setup(ps=8, width=4, seed=2):
+    cfg = AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16)
+    params = init_params(attn.attn_spec(32, cfg), jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def test_paged_decode_matches_dense_decode():
+    """Same context, same new token: the paged path and the dense ring
+    path produce identical outputs (fp32 math over bf16 cache bytes)."""
+    cfg, params = _attn_setup()
+    b, ps, width, slots = 2, 8, 4, 32
+    ctx_lens = np.array([13, 21])
+    dense = attn.init_cache(b, slots, cfg)
+    paged = attn.init_paged_cache(1 + b * width, ps, cfg)
+    table = np.zeros((b, width), np.int32)
+    table[0, :width] = np.arange(1, 1 + width)
+    table[1, :width] = np.arange(1 + width, 1 + 2 * width)
+
+    # build identical contexts token by token through both paths
+    x_ctx = jax.random.normal(KEY, (b, int(ctx_lens.max()), 32), jnp.float32)
+    for t in range(int(ctx_lens.max())):
+        active = ctx_lens > t
+        idx = jnp.full((b,), t, jnp.int32)
+        _, dense = attn.decode_attention(
+            params, x_ctx[:, t : t + 1], dense, cfg, index=idx
+        )
+        _, paged = attn.paged_decode_attention(
+            params, x_ctx[:, t : t + 1], paged, cfg, index=idx,
+            block_table=jnp.asarray(table),
+            lengths=jnp.asarray(np.where(active, t + 1, ctx_lens), jnp.int32),
+        )
+    # dense wrote every slot to max ctx len; rewind pos for the short
+    # sequence so both caches describe the same ragged contexts
+    pos_fix = jnp.where(
+        jnp.arange(slots)[None, :] < jnp.asarray(ctx_lens)[:, None],
+        dense.pos, -1,
+    )
+    dense = dense._replace(pos=pos_fix)
+
+    x_new = jax.random.normal(jax.random.PRNGKey(5), (b, 1, 32), jnp.float32)
+    out_d, _ = attn.decode_attention(
+        params, x_new, dense, cfg, index=jnp.asarray(ctx_lens, jnp.int32)
+    )
+    out_p, _ = attn.paged_decode_attention(
+        params, x_new, paged, cfg, index=jnp.asarray(ctx_lens, jnp.int32),
+        block_table=jnp.asarray(table),
+        lengths=jnp.asarray(ctx_lens + 1, jnp.int32),
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_d, np.float32), np.asarray(out_p, np.float32),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_paged_decode_rejects_windows():
+    cfg, params = _attn_setup()
+    paged = attn.init_paged_cache(8, 8, cfg)
+    x = jnp.zeros((1, 1, 32), jnp.float32)
+    with pytest.raises(NotImplementedError):
+        attn.paged_decode_attention(
+            params, x, paged, cfg, index=jnp.int32(0),
+            block_table=jnp.zeros((1, 2), jnp.int32),
+            lengths=jnp.ones((1,), jnp.int32), window=16,
+        )
+
+
+def test_quant_paged_tracks_bf16_paged():
+    cfg, params = _attn_setup()
+    b, ps, width = 1, 8, 3
+    paged16 = attn.init_paged_cache(8, ps, cfg)
+    paged8 = kvquant.init_quant_paged_cache(8, ps, cfg)
+    table = jnp.array([[1, 2, 3]], jnp.int32)
+    outs16, outs8 = [], []
+    x = jax.random.normal(KEY, (b, 12, 32), jnp.float32)
+    for t in range(12):
+        idx = jnp.full((b,), t, jnp.int32)
+        ln = jnp.full((b,), t + 1, jnp.int32)
+        o16, paged16 = attn.paged_decode_attention(
+            params, x[:, t : t + 1], paged16, cfg, index=idx,
+            block_table=table, lengths=ln,
+        )
+        o8, paged8 = kvquant.quant_paged_decode_attention(
+            params, x[:, t : t + 1], paged8, cfg, index=idx,
+            block_table=table, lengths=ln,
+        )
+        outs16.append(o16)
+        outs8.append(o8)
+    a = np.asarray(jnp.concatenate(outs16, 1), np.float32)
+    c = np.asarray(jnp.concatenate(outs8, 1), np.float32)
+    np.testing.assert_allclose(a, c, rtol=0.25, atol=0.25)  # int8 noise bound

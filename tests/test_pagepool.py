@@ -1,0 +1,226 @@
+"""Host-side serving subsystem tests: page pool, radix prefix cache,
+scheduler policy (no device work — pure bookkeeping)."""
+import pytest
+
+from repro.serve import NULL_PAGE, PagePool, PrefixCache, Scheduler
+
+
+# ---------------------------------------------------------------------------
+# PagePool
+# ---------------------------------------------------------------------------
+
+
+def test_refcount_lifecycle_alloc_share_release_reuse():
+    pool = PagePool(6, 4)  # pages 1..5 usable
+    a = pool.alloc(2)
+    assert a is not None and len(a) == 2 and NULL_PAGE not in a
+    assert pool.free_pages == 3 and pool.in_use == 2
+    pool.share(a)  # multicast to a second consumer
+    assert [pool.refcount(p) for p in a] == [2, 2]
+    assert pool.release(a) == []  # still held by the other consumer
+    assert pool.in_use == 2
+    freed = pool.release(a)
+    assert sorted(freed) == sorted(a) and pool.free_pages == 5
+    # freed pages are granted again
+    b = pool.alloc(5)
+    assert b is not None and set(a) <= set(b)
+    assert pool.stats.allocated == 7 and pool.stats.freed == 2
+    assert pool.stats.peak_in_use == 5
+
+
+def test_alloc_is_all_or_nothing():
+    pool = PagePool(4, 8)
+    assert pool.alloc(4) is None  # only 3 usable — nothing granted
+    assert pool.free_pages == 3
+    assert pool.alloc(3) is not None
+    assert pool.alloc(1) is None
+
+
+def test_null_page_never_granted_and_never_released():
+    pool = PagePool(8, 4)
+    got = pool.alloc(7)
+    assert NULL_PAGE not in got
+    with pytest.raises(ValueError):
+        pool.release([NULL_PAGE])
+
+
+def test_cow_exclusive_page_is_free():
+    pool = PagePool(6, 4)
+    (pid,) = pool.alloc(1)
+    assert pool.cow(pid) == (pid, False)  # refcount 1: no copy
+    assert pool.stats.cow_copies == 0
+
+
+def test_cow_shared_page_diverges():
+    pool = PagePool(6, 4)
+    (pid,) = pool.alloc(1)
+    pool.share([pid])
+    new_id, copied = pool.cow(pid)
+    assert copied and new_id != pid
+    assert pool.refcount(pid) == 1  # the other consumer keeps the original
+    assert pool.refcount(new_id) == 1
+    assert pool.stats.cow_copies == 1
+
+
+def test_cow_pool_dry_returns_none():
+    pool = PagePool(3, 4)
+    a = pool.alloc(2)
+    pool.share([a[0]])
+    assert pool.cow(a[0]) is None  # no page to copy into
+    assert pool.refcount(a[0]) == 2  # untouched
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache
+# ---------------------------------------------------------------------------
+
+
+def _pool_and_cache(num_pages=32, ps=4):
+    pool = PagePool(num_pages, ps)
+    return pool, PrefixCache(pool, ps)
+
+
+def test_prefix_insert_then_match_shares_pages():
+    pool, cache = _pool_and_cache()
+    tokens = list(range(12))  # 3 full pages of 4
+    pages = pool.alloc(3)
+    assert cache.insert(tokens, pages) == 3
+    assert [pool.refcount(p) for p in pages] == [2, 2, 2]  # owner + tree
+    # a second prompt sharing 2 pages + divergent tail
+    got, n = cache.match([0, 1, 2, 3, 4, 5, 6, 7, 99, 98])
+    assert got == pages[:2] and n == 8
+    assert [pool.refcount(p) for p in pages] == [3, 3, 2]
+    assert cache.hit_tokens == 8
+
+
+def test_prefix_match_never_covers_the_last_token():
+    pool, cache = _pool_and_cache()
+    tokens = list(range(8))  # exactly 2 pages
+    pages = pool.alloc(2)
+    cache.insert(tokens, pages)
+    # a prompt equal to the cached tokens: the page holding its final
+    # token must stay unmatched so at least one token prefills
+    got, n = cache.match(list(tokens))
+    assert got == pages[:1] and n == 4
+
+
+def test_prefix_unmatch_fully_unwinds_a_rejected_probe():
+    pool, cache = _pool_and_cache()
+    pages = pool.alloc(2)
+    cache.insert(list(range(8)), pages)
+    prompt = list(range(8)) + [42]
+    got, n = cache.match(prompt)
+    hit0, miss0, shared0 = cache.hit_tokens, cache.miss_tokens, pool.stats.shared
+    # a queued request re-probing every scheduling round must not
+    # inflate the multicast stats while being rejected
+    for _ in range(5):
+        got, n = cache.match(prompt)
+        cache.unmatch(got, len(prompt))
+    assert (cache.hit_tokens, cache.miss_tokens) == (hit0, miss0)
+    assert pool.stats.shared == shared0
+    # owner + tree + the one still-live match (both pages are proper-
+    # prefix pages of the 9-token prompt)
+    assert [pool.refcount(p) for p in pages] == [3, 3]
+
+
+def test_prefix_lru_eviction_order_and_refcount_guard():
+    pool, cache = _pool_and_cache(num_pages=16, ps=4)
+    a_pages = pool.alloc(2)
+    b_pages = pool.alloc(2)
+    cache.insert([1] * 8, a_pages)
+    cache.insert([2] * 8, b_pages)
+    # owner refs released: tree is the last holder of all four pages
+    pool.release(a_pages)
+    pool.release(b_pages)
+    cache.match([2] * 8 + [3])  # touch chain B (takes a match ref)
+    assert cache.evict(1) == 1  # LRU leaf: the tail of chain A
+    assert pool.refcount(a_pages[1]) == 0
+    assert pool.refcount(a_pages[0]) == 1  # now a leaf, next in line
+    assert cache.evict(4) == 1  # A fully gone; B pinned by the match ref
+    assert pool.refcount(b_pages[1]) == 2
+    assert len(cache) == 2  # both B nodes survive
+
+
+def test_prefix_eviction_cascades_leaf_first():
+    pool, cache = _pool_and_cache()
+    pages = pool.alloc(3)
+    cache.insert(list(range(12)), pages)
+    pool.release(pages)
+    assert cache.evict(3) == 3  # tail -> middle -> head
+    assert pool.free_pages == pool.num_pages - 1
+    assert len(cache) == 0
+
+
+def test_prefix_insert_is_idempotent_first_writer_wins():
+    pool, cache = _pool_and_cache()
+    p1 = pool.alloc(2)
+    p2 = pool.alloc(2)
+    cache.insert(list(range(8)), p1)
+    assert cache.insert(list(range(8)), p2) == 0  # already cached
+    got, _ = cache.match(list(range(8)) + [42])
+    assert got == p1  # the original chain is the canonical copy
+    assert pool.refcount(p2[0]) == 1  # duplicate got no tree ref
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_watermark_admission():
+    pool = PagePool(11, 4)  # 10 usable
+    sched = Scheduler(pool, watermark=2)
+    assert sched.can_admit(8)
+    assert not sched.can_admit(9)  # would dip under the watermark
+    assert sched.pages_for(9) == 3
+
+
+def test_admission_evicts_cold_prefix_chains_first():
+    pool = PagePool(9, 4)  # 8 usable
+    prefix = PrefixCache(pool, 4)
+    sched = Scheduler(pool, prefix, watermark=0)
+    pages = pool.alloc(6)
+    prefix.insert([7] * 24, pages)
+    pool.release(pages)  # tree-only refs: evictable
+    assert pool.free_pages == 2
+    assert sched.can_admit(5)  # eviction makes room
+    assert pool.free_pages >= 5
+
+
+def test_infeasible_admission_does_not_destroy_the_prefix_cache():
+    pool = PagePool(9, 4)  # 8 usable
+    prefix = PrefixCache(pool, 4)
+    sched = Scheduler(pool, prefix, watermark=0)
+    pages = pool.alloc(4)
+    prefix.insert([7] * 16, pages)
+    pool.release(pages)  # tree-only refs: evictable
+    # a demand that eviction can never cover must not evict anything —
+    # the request gets re-probed every round and would strip the cache
+    assert not sched.can_admit(40)
+    assert len(prefix) == 4
+    assert not sched.reclaim(40)
+    assert len(prefix) == 4
+    # a feasible demand still evicts exactly what unblocks it
+    assert sched.can_admit(6)
+    assert pool.free_pages >= 6
+
+
+def test_evictable_pages_excludes_pinned_subtrees():
+    pool, cache = _pool_and_cache()
+    pages = pool.alloc(3)
+    cache.insert(list(range(12)), pages)
+    pool.release(pages)
+    assert cache.evictable_pages() == 3
+    # a match ref on the full chain pins every node on it
+    got, _ = cache.match(list(range(12)) + [1])
+    assert got == pages and cache.evictable_pages() == 0
+    # releasing only the tail leaves the tail evictable, ancestors pinned
+    pool.release(pages[2:])
+    assert cache.evictable_pages() == 1
+
+
+def test_preemption_picks_the_youngest():
+    pool = PagePool(4, 4)
+    sched = Scheduler(pool)
+    assert sched.pick_victim([3, 0, 2]) == 2  # admit order, youngest last
+    assert sched.pick_victim([]) is None

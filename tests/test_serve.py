@@ -1,4 +1,5 @@
-"""Serving-loop tests: continuous batching + decode consistency."""
+"""Serving-loop tests: continuous batching + decode consistency, dense
+ring-buffer fallback vs. the paged (prefix-sharing) engine."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +8,7 @@ import pytest
 from repro.configs import get_config
 from repro.launch.serve import Request, Server
 from repro.models import lm
+from repro.serve import PagedEngine
 
 KEY = jax.random.PRNGKey(0)
 
@@ -53,6 +55,161 @@ def test_continuous_batching_all_served(small):
     done = server.run(reqs)
     assert len(done) == 5
     assert all(len(r.out) == 4 for r in done)
+
+
+# ---------------------------------------------------------------------------
+# paged engine vs. dense fallback
+# ---------------------------------------------------------------------------
+
+
+def _mk_requests(cfg, *, shared_prefix=0, n=4, max_new=5, seed=7):
+    rng = np.random.default_rng(seed)
+    prefix = list(rng.integers(0, cfg.vocab, size=shared_prefix))
+    return [
+        Request(rid=i, prompt=prefix + list(rng.integers(0, cfg.vocab, size=3 + i)),
+                max_new=max_new)
+        for i in range(n)
+    ]
+
+
+def _clone(reqs):
+    return [Request(rid=r.rid, prompt=list(r.prompt), max_new=r.max_new)
+            for r in reqs]
+
+
+def test_paged_matches_dense_cold(small):
+    cfg, params = small
+    reqs = _mk_requests(cfg, n=5)
+    dense = {r.rid: r.out for r in
+             Server(cfg, params, max_batch=2, cache_len=64).run(_clone(reqs))}
+    eng = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=16)
+    paged = {r.rid: r.out for r in eng.run(_clone(reqs))}
+    assert paged == dense
+
+
+def test_paged_matches_dense_with_shared_prefix(small):
+    cfg, params = small
+    reqs = _mk_requests(cfg, shared_prefix=32, n=4)
+    dense = {r.rid: r.out for r in
+             Server(cfg, params, max_batch=2, cache_len=64).run(_clone(reqs))}
+    eng = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8)
+    paged = {r.rid: r.out for r in eng.run(_clone(reqs))}
+    assert paged == dense
+    st = eng.stats()
+    # the 32-token prefix (4 pages of 8) prefilled once, multicast to
+    # the other 3 requests
+    assert st["prefix_hit_tokens"] == 3 * 32
+    assert st["prefix_pages"] >= 4
+
+
+def test_prefix_pages_allocated_exactly_once(small):
+    cfg, params = small
+    n, prefix_len, ps = 4, 32, 8
+    reqs = _mk_requests(cfg, shared_prefix=prefix_len, n=n, max_new=3)
+    eng = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=ps)
+    eng.run(reqs)
+    # every allocation beyond request 0's is suffix/decode-only: the
+    # prefix pages were granted exactly once and shared thereafter.
+    # A request writes positions [0, len+max_new-1) (the final sampled
+    # token is never fed back); admission pre-allocates through len+1.
+    expected = sum(
+        max(-(-(len(r.prompt) + 1) // ps),
+            -(-(len(r.prompt) + r.max_new - 1) // ps))
+        for r in reqs
+    ) - (n - 1) * (prefix_len // ps)
+    assert eng.pool.stats.allocated == expected
+    assert eng.pool.stats.shared >= (n - 1) * (prefix_len // ps)
+
+
+def test_preemption_restores_pages_bit_identically(small):
+    cfg, params = small
+    eng = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8)
+    reqs = _mk_requests(cfg, n=2, max_new=4)
+    assert eng._admit(reqs[0]) and eng._admit(reqs[1])
+    slot = 1
+    st = eng.slots[slot]
+    n_pages = len(st.pages)
+    before = jax.device_get(
+        eng._gather_pages(eng.caches, eng._pages_ids_fixed(st.pages))
+    )
+    eng._preempt(slot)
+    assert reqs[1]._swap is not None and eng.pool.stats.freed >= n_pages
+    # dirty the freed pages: restore must come from the host copy
+    got = eng.pool.alloc(n_pages)
+    eng.caches = eng._scatter_pages(
+        eng.caches, eng._pages_ids_fixed(got),
+        jax.tree.map(lambda a: np.full_like(a, -1),
+                     jax.device_get(eng._gather_pages(
+                         eng.caches, eng._pages_ids_fixed(got)))),
+    )
+    eng.pool.release(got)
+    assert eng._swap_in(slot, reqs[1])
+    st2 = eng.slots[slot]
+    after = jax.device_get(
+        eng._gather_pages(eng.caches, eng._pages_ids_fixed(st2.pages))
+    )
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a[:, :, :n_pages], b[:, :, :n_pages])
+
+
+def test_preemption_under_pressure_end_to_end(small):
+    cfg, params = small
+    reqs = _mk_requests(cfg, n=3, max_new=10, seed=3)
+    dense = {r.rid: r.out for r in
+             Server(cfg, params, max_batch=2, cache_len=64).run(_clone(reqs))}
+    # pool too small for two full requests -> decode page faults preempt
+    eng = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=4,
+                      num_pages=7, watermark=1)
+    paged = {r.rid: r.out for r in eng.run(_clone(reqs))}
+    assert eng.n_preempted > 0
+    assert {rid: out for rid, out in paged.items()} == dense
+
+
+def test_fork_copy_on_write(small):
+    cfg, params = small
+    eng = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8)
+    parent = Request(rid=0, prompt=[5, 9, 2, 7, 11, 3], max_new=6)
+    assert eng._admit(parent)
+    child = Request(rid=1, prompt=list(parent.prompt), max_new=6)
+    slot = eng.fork(0, child)
+    assert slot is not None
+    tail = eng.slots[0].pages[-1]
+    assert eng.pool.refcount(tail) >= 2  # shared until someone writes
+    done = {}
+    while len(done) < 2:
+        for r in eng.step():
+            done[r.rid] = r.out
+    assert eng.n_cow >= 1  # divergence copied the shared tail page
+    assert done[0] == done[1]  # identical state -> identical greedy tokens
+
+
+def test_paged_engine_int8_pages_serve(small):
+    cfg, params = small
+    reqs = _mk_requests(cfg, n=3, max_new=4)
+    eng = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8,
+                      kv_dtype="int8")
+    done = eng.run(reqs)
+    assert len(done) == 3 and all(len(r.out) == 4 for r in done)
+
+
+def test_paged_cache_rejects_unsupported_archs():
+    cfg = get_config("recurrentgemma-2b", reduced=True)  # windows + rglru
+    with pytest.raises(ValueError, match="paged KV serving"):
+        lm.init_paged_cache(cfg, 8, 8)
+    # MoE too: expert capacity scales with the padded call length, so
+    # bucketed / suffix prefills would route real tokens differently
+    cfg_moe = get_config("moonshot-v1-16b-a3b", reduced=True)
+    with pytest.raises(ValueError, match="paged KV serving"):
+        lm.init_paged_cache(cfg_moe, 8, 8)
+
+
+def test_dense_server_disables_bucketing_where_padding_is_inexact():
+    cfg_moe = get_config("moonshot-v1-16b-a3b", reduced=True)
+    params = lm.init(cfg_moe, KEY)
+    assert Server(cfg_moe, params, max_batch=1, cache_len=32)._bucket is None
+    cfg_win = get_config("recurrentgemma-2b", reduced=True)
+    params = lm.init(cfg_win, KEY)
+    assert Server(cfg_win, params, max_batch=1, cache_len=32)._bucket is None
 
 
 def test_ring_buffer_local_cache_decode(small):
