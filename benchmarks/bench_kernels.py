@@ -31,7 +31,9 @@ import jax.numpy as jnp
 REPS = 20
 
 
-def run() -> list[str]:
+def run(only: str | None = None) -> list[str]:
+    """``only``: substring row filter — non-matching rows are neither
+    compiled nor timed (the ``benchmarks.run --only`` fast path)."""
     from repro import kernels
     from repro.kernels import autotune
 
@@ -117,6 +119,11 @@ def run() -> list[str]:
         ("kernel_linear_dispatch_bwd", lin_bwd,
          "grad(linear) default policy reference anchor M2048 K512 N512"),
     ]
+
+    if only is not None:
+        bench = [row for row in bench if only in row[0]]
+        if not bench:
+            return []
 
     for _, fn, _ in bench:
         fn().block_until_ready()  # compile

@@ -89,7 +89,10 @@ from repro.kernels.matmul.matmul import (
     matmul_mcast_tiled,
     matmul_unicast,
 )
-from repro.kernels.paged_attention.paged_attention import paged_attention_decode
+from repro.kernels.paged_attention.paged_attention import (
+    paged_attention_decode,
+    paged_attention_prefill,
+)
 from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kernels.rglru.ref import rglru_scan_ref
 from repro.kernels.rglru.rglru import rglru_scan, rglru_scan_bwd
@@ -916,21 +919,29 @@ register(KernelOp(
 def _paged_pallas(q, k_pages, v_pages, block_table, start, lengths, *scales,
                   cfg, opts, interpret):
     if q.shape[1] != 1 or scales:
-        what = (
-            f"got {q.shape[1]} query tokens" if q.shape[1] != 1
-            else "got int8 pages with dequant scales"
-        )
+        # only a by-name forced policy can land here: availability routes
+        # multi-token / int8 problems to the supertile schedule
         raise ValueError(
-            "paged_attention: the pallas schedule is a single-token bf16/fp32 "
-            f"decode kernel ({what}); multi-token (prefix-hit prefill) and "
-            "int8 (dequant-on-gather) calls run the reference schedule — "
-            "drop the forced pallas policy and let dispatch pick it"
+            "paged_attention: schedule 'pallas' is the single-token bf16/"
+            "fp32 decode kernel; multi-token and int8 calls run the "
+            "'pallas_prefill' supertile schedule (backend='pallas' picks "
+            "it automatically)"
         )
     o = paged_attention_decode(
         q[:, 0], k_pages, v_pages, block_table, start, lengths,
         softcap=opts["softcap"], interpret=interpret,
     )
     return o[:, None]
+
+
+def _paged_prefill_pallas(q, k_pages, v_pages, block_table, start, lengths,
+                          *scales, cfg, opts, interpret):
+    k_scale, v_scale = scales if scales else (None, None)
+    return paged_attention_prefill(
+        q, k_pages, v_pages, block_table, start, lengths,
+        k_scale=k_scale, v_scale=v_scale, softcap=opts["softcap"],
+        qc=cfg.get("qc"), interpret=interpret,
+    )
 
 
 def _paged_reference(q, k_pages, v_pages, block_table, start, lengths, *scales,
@@ -943,12 +954,13 @@ def _paged_reference(q, k_pages, v_pages, block_table, start, lengths, *scales,
 
 
 _paged_fits = _fits_vmem("paged_attention")
+_paged_prefill_fits = _fits_vmem("paged_attention", "prefill")
 
 register(KernelOp(
     name="paged_attention",
     # q: (b, s, h, d); pages: (kvh, P, ps, d); table: (b, pages_per_seq);
     # start/lengths: (b,).  Trailing flag: number of scale arrays (int8
-    # pools pass 2 — the availability predicate reads it, since opts
+    # pools pass 2 — the availability predicates read it, since opts
     # can't see arity)
     problem=lambda q, kp, vp, bt, st, ln, *scales: (
         q.shape[0], q.shape[1], q.shape[2], kp.shape[0],
@@ -956,13 +968,20 @@ register(KernelOp(
     ),
     opt_defaults=(("softcap", None),),
     schedules=(
-        # the pallas kernel is decode-shaped: one query token, bf16/fp32
-        # pages (int8 pools dequant-on-gather in the reference backend)
+        # single-token bf16/fp32 decode kernel: the cheapest pick for
+        # the steady-state decode problem it is shaped for
         Schedule("pallas", "pallas", _paged_pallas,
                  available=lambda p: (
                      p.shape[1] == 1 and p.shape[-1] == 0 and _paged_fits(p)
                  ),
                  cost=_model_cost("paged_attention"), vjp=False),
+        # chunked-prefill supertile kernel: any s (prefix-hit suffix
+        # prefills) and int8 pages (fused dequant-on-gather) — one K/V
+        # page fetch multicast across the q chunk
+        Schedule("pallas_prefill", "pallas", _paged_prefill_pallas,
+                 available=_paged_prefill_fits,
+                 cost=_model_cost("paged_attention", "prefill"),
+                 autotune_schedule="prefill", vjp=False),
         Schedule("reference", "reference", _paged_reference, vjp=True),
     ),
 ))

@@ -215,21 +215,56 @@ def _ssd_candidates(shape: Sequence[int], dsize: int, direction: str) -> list[Ca
     return out
 
 
+_PAGED_QC = (8, 16, 32, 64, 128)
+
+
 def _paged_attention_candidates(
-    shape: Sequence[int], dsize: int, direction: str
+    schedule: str, shape: Sequence[int], dsize: int, direction: str
 ) -> list[Candidate]:
-    """Paged decode attention has no free block knobs — the page size is
-    fixed by the pool geometry — but modeling its one configuration
-    gives the dispatch layer the same availability (VMEM fit) and cost
-    hooks every other family gets.  Shape key:
-    (b, s, h, kvh, pages_per_seq, page_size, d, n_scale_arrays)."""
-    b, s, h, kvh, pages, ps, d, _ = shape
+    """Paged attention candidates.  Shape key:
+    (b, s, h, kvh, pages_per_seq, page_size, d, n_scale_arrays).
+
+    * ``"default"`` — the single-token decode kernel: no free block
+      knobs (the page size is fixed by the pool geometry), but modeling
+      its one configuration gives the dispatch layer the same
+      availability (VMEM fit) and cost hooks every other family gets.
+    * ``"prefill"`` — the chunked-prefill supertile kernel: the q-chunk
+      size ``qc`` is the multicast fanout knob (one K/V page fetch is
+      reused by all ``qc * group`` query rows of the chunk), so K/V
+      traffic scales with ``ceil(s / qc)`` — bigger chunks win until
+      the fp32 softmax state for ``qc * group`` rows overflows VMEM.
+      int8 pools (``n_scale_arrays > 0``) stream 1-byte pages plus
+      their bf16 scale columns.
+    """
+    b, s, h, kvh, pages, ps, d, n_scales = shape
     group = max(1, h // max(kvh, 1))
-    # q/o (group, d) resident + double-buffered k/v page streams
-    # + fp32 softmax state scratch (m, l, acc)
-    vmem = 2 * (group * d + 2 * ps * d) * dsize + group * (2 + d) * 4
+    kv_size = 1 if n_scales else dsize  # int8 pages stream 1 byte/elt
+    scale_vmem = 2 * 2 * ps * 2 if n_scales else 0  # bf16 scale columns
+    if schedule == "prefill":
+        out = []
+        for qc in _clip(_PAGED_QC, s, align=1):
+            rows = qc * group
+            # q/o chunk double-buffered + k/v page streams (+ scales)
+            # + fp32 softmax state (m, l, acc) and the (rows, ps) scores
+            vmem = (
+                2 * 2 * rows * d * dsize
+                + 2 * 2 * ps * d * kv_size + scale_vmem
+                + rows * (2 + d) * 4 + rows * ps * 4
+            )
+            q_chunks = _cdiv(s, qc)
+            steps = b * kvh * q_chunks * pages
+            hbm = (
+                2 * b * s * h * d * dsize  # q in, o out
+                + 2 * kvh * pages * ps * d * kv_size * b * q_chunks
+            )
+            out.append(_mk({"qc": qc}, vmem, steps, hbm))
+        return out
+    # "default": the decode kernel — q/o (group, d) resident +
+    # double-buffered k/v page streams + fp32 softmax state scratch
+    vmem = 2 * (group * d * dsize + 2 * ps * d * kv_size) \
+        + scale_vmem + group * (2 + d) * 4
     steps = b * kvh * pages
-    hbm = (b * h * d + 2 * kvh * b * pages * ps * d) * dsize
+    hbm = b * h * d * dsize + 2 * kvh * b * pages * ps * d * kv_size
     return [_mk({}, vmem, steps, hbm)]
 
 
@@ -258,9 +293,7 @@ _GENERATORS: dict[str, Callable[..., list[Candidate]]] = {
     "flash_attention": lambda schedule, shape, dsize, direction: _flash_candidates(
         shape, dsize, direction
     ),
-    "paged_attention": lambda schedule, shape, dsize, direction: (
-        _paged_attention_candidates(shape, dsize, direction)
-    ),
+    "paged_attention": _paged_attention_candidates,
     "ssd": lambda schedule, shape, dsize, direction: _ssd_candidates(
         shape, dsize, direction
     ),

@@ -1,5 +1,6 @@
 from repro.kernels.paged_attention.paged_attention import (  # noqa: F401
     paged_attention_decode,
+    paged_attention_prefill,
 )
 from repro.kernels.paged_attention.ref import (  # noqa: F401
     gather_pages,

@@ -139,6 +139,15 @@ def main() -> None:
                     help="page-pool size (default: dense-equivalent footprint)")
     ap.add_argument("--kv-dtype", choices=("bf16", "int8"), default="bf16",
                     help="paged page storage dtype (int8 = quantised pages)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="paged chunked prefill: split divergent suffixes "
+                         "into fixed-size chunks (pages charged per chunk); "
+                         "default: one bucket-padded call")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common random prefix of this many tokens "
+                         "to every request (exercises the paged engine's "
+                         "prefix multicast + chunked suffix prefill in the "
+                         "CI smoke matrix)")
     ap.add_argument("--kernel-policy", default=None,
                     help='kernel dispatch policy, e.g. "tiled" or '
                          '"backend=reference" (see repro.kernels.api)')
@@ -152,12 +161,17 @@ def main() -> None:
         server = PagedEngine(
             cfg, params, max_batch=args.max_batch, page_size=args.page_size,
             num_pages=args.pages, kv_dtype=args.kv_dtype,
+            prefill_chunk=args.prefill_chunk,
         )
     else:
         server = Server(cfg, params, max_batch=args.max_batch)
     rng = np.random.default_rng(0)
+    prefix = list(rng.integers(0, cfg.vocab, size=args.shared_prefix))
     reqs = [
-        Request(rid=i, prompt=list(rng.integers(0, cfg.vocab, size=rng.integers(4, 12))),
+        Request(rid=i,
+                prompt=prefix + list(
+                    rng.integers(0, cfg.vocab, size=rng.integers(4, 12))
+                ),
                 max_new=args.max_new)
         for i in range(args.requests)
     ]

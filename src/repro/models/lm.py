@@ -253,7 +253,9 @@ def prefill_to_pages(dense_caches, paged_caches, block_table, length):
     ``[0, pages * page_size)``; rows past ``length`` (bucket padding) go
     to the null page.  Cold paged prefills run the exact same
     ``lm.prefill`` as the dense path and then land here, so the page
-    bytes are bit-identical to the dense fallback's ring bytes."""
+    bytes are bit-identical to the dense fallback's ring bytes.  (The
+    prefix-hit *suffix* path never comes through here — it writes its
+    pages directly via ``decode_step``, one call per prefill chunk.)"""
     flat_d, _ = jax.tree_util.tree_flatten(
         dense_caches, is_leaf=lambda x: isinstance(x, _DENSE_CACHES)
     )
@@ -549,6 +551,11 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, index, *,
     token (scalar, or (batch,) for ragged continuous batching).  Paged
     caches additionally take the shared ``block_table`` (batch, pages)
     and ``lengths`` (batch,) = valid tokens after this call's writes.
+    This is also the chunked-prefill entry point: the serving engine
+    splits a long divergent suffix into fixed-size chunks and calls
+    this once per chunk (advancing ``index``/``lengths``), which writes
+    the same page bytes as one big call — on TPU each multi-token call
+    runs the paged-attention supertile kernel.
 
     Returns (logits (batch, s_new, vocab), updated caches)."""
     x = _embed_inputs(params, cfg, tokens)

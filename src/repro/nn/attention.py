@@ -157,8 +157,12 @@ def paged_decode_attention(
     the first new token (scalar or (b,)).  The ``s_new`` new tokens are
     written into their block-table pages first, then attention runs over
     all ``lengths`` valid positions through the ``paged_attention``
-    kernel op (single-token calls dispatch to the pallas gather kernel
-    on TPU; multi-token suffix prefills run the reference gather).
+    kernel op: on TPU, single-token calls dispatch to the pallas decode
+    gather kernel and multi-token suffix prefills to the chunked-prefill
+    supertile kernel (one K/V page fetch multicast across the q chunk);
+    off-TPU both run the reference gather.  Calling this per suffix
+    *chunk* (increasing ``index``/``lengths``) leaves page bytes
+    identical to one call — the engine's chunked prefill relies on it.
     """
     if window is not None:
         raise NotImplementedError(

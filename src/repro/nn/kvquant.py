@@ -121,7 +121,10 @@ def quant_decode_attention(
 class QuantPagedKvCache(NamedTuple):
     """int8 page pool (`nn.attention.PagedKvCache` with per-(page, slot,
     head) scales): halves the dominant decode HBM term for paged serving
-    too.  The reference paged-attention backend dequantises on gather."""
+    too.  Both paged-attention backends dequantise on gather — the
+    pallas supertile kernel fuses the int8 * scale dequant into the page
+    DMA consumption (scales ride the same block-table index maps), the
+    reference backend dequantises the gathered copy."""
 
     k_pages: jax.Array  # (kv_heads, num_pages, page_size, head_dim) int8
     v_pages: jax.Array
@@ -152,7 +155,8 @@ def quant_paged_decode_attention(
 ):
     """`attention.paged_decode_attention` against int8 pages: new K/V
     rows are quantised on the way in, the attention gather dequantises
-    on the way out (the reference backend's dequant hook)."""
+    on the way out (fused in-kernel on the pallas supertile schedule,
+    on the gathered copy in the reference backend)."""
     if window is not None:
         raise NotImplementedError(
             "paged KV serving covers global attention only; local-window "

@@ -13,6 +13,13 @@ Owns the device side of paged serving and executes the
   shared pages.  Cold prompts run the exact dense-path ``lm.prefill``
   and scatter into pages, so paged and dense serving produce identical
   token streams (CI-diffed),
+* **chunked prefill** (``prefill_chunk=``): a long divergent suffix is
+  split into fixed-size chunks, each run as its own ``decode_step``
+  (the paged-attention supertile kernel on TPU) with its own pages
+  charged as the block table grows — admission latency and the
+  per-admission page spike are bounded by the chunk size, and chunk
+  boundaries are provably invisible to the attention math (each chunk
+  attends to the pages previous chunks wrote, exactly like decode),
 * **bucketed compiles**: prompts/suffixes right-pad to shared length
   buckets — one XLA program per bucket instead of one per prompt
   length — with padded positions masked (dense) or redirected to the
@@ -94,9 +101,11 @@ class PagedEngine:
     def __init__(self, cfg, params, *, max_batch: int = 4, cache_len: int = 256,
                  page_size: int = 16, num_pages: int | None = None,
                  kv_dtype: str = "bf16", watermark: int = 2,
-                 prompt_bucket: int = 16):
+                 prompt_bucket: int = 16, prefill_chunk: int | None = None):
         if cache_len % page_size:
             raise ValueError("cache_len must be a multiple of page_size")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -104,6 +113,13 @@ class PagedEngine:
         self.table_width = cache_len // page_size
         self.cache_len = cache_len
         self.prompt_bucket = prompt_bucket
+        # chunked prefill: divergent suffixes longer than this run as
+        # fixed-size chunks (pages charged per chunk) instead of one
+        # bucket-padded call — bounds the per-admission compute spike
+        # without changing any token (chunk boundaries are invisible to
+        # the attention math: each chunk attends to the pages the
+        # previous chunks already wrote, exactly like decode does)
+        self.prefill_chunk = prefill_chunk
         if num_pages is None:
             # the dense fallback's footprint: one full-length cache per
             # batch slot, plus the null page
@@ -206,32 +222,49 @@ class PagedEngine:
         if not self.sched.can_admit(fresh_needed):
             self.prefix.unmatch(shared, len(prompt))
             return False
-        fresh = self.pool.alloc(fresh_needed)
-        assert fresh is not None  # can_admit just checked
-        pages = shared + fresh
-        table_row = jnp.asarray(self._table_row(pages))
 
         if n_matched == 0:
             # cold prompt: the dense path's own prefill, scattered into
             # pages — bit-identical bytes to the dense fallback
+            fresh = self.pool.alloc(fresh_needed)
+            assert fresh is not None  # can_admit just checked
+            pages = shared + fresh
             toks = pad_to_bucket(prompt, self.prompt_bucket)
             logits, self.caches = self._cold_prefill(
                 self.params, self.caches, jnp.asarray(toks),
-                jnp.int32(len(prompt) - 1), table_row, jnp.int32(len(prompt)),
+                jnp.int32(len(prompt) - 1),
+                jnp.asarray(self._table_row(pages)), jnp.int32(len(prompt)),
             )
         else:
             # prefix hit: the shared pages are "multicast" to this
             # request (refcount bump, zero compute) — only the divergent
             # suffix runs, attending to the shared pages at its true
-            # positions
+            # positions, split into fixed-size chunks when it outgrows
+            # ``prefill_chunk`` (each chunk is charged its own pages —
+            # can_admit reserved the full demand, so the draws succeed)
+            pages = list(shared)
             suffix = prompt[n_matched:]
-            toks = pad_to_bucket(suffix, self.prompt_bucket)
-            logits, self.caches = self._suffix_prefill(
-                self.params, self.caches, jnp.asarray(toks),
-                jnp.int32(len(suffix) - 1), table_row[None],
-                jnp.asarray([n_matched], jnp.int32),
-                jnp.asarray([len(prompt)], jnp.int32),
-            )
+            chunk = self.prefill_chunk or len(suffix)
+            for c0 in range(0, len(suffix), chunk):
+                ctoks = suffix[c0 : c0 + chunk]
+                last_chunk = c0 + chunk >= len(suffix)
+                # the final chunk also covers the first decode write
+                end = len(prompt) + 1 if last_chunk else n_matched + c0 + len(ctoks)
+                need = self.sched.pages_for_range(
+                    len(pages) * self.page_size, end
+                )
+                if need:
+                    got = self.pool.alloc(need)
+                    assert got is not None  # reserved by can_admit above
+                    pages.extend(got)
+                toks = pad_to_bucket(ctoks, self.prompt_bucket)
+                logits, self.caches = self._suffix_prefill(
+                    self.params, self.caches, jnp.asarray(toks),
+                    jnp.int32(len(ctoks) - 1),
+                    jnp.asarray(self._table_row(pages))[None],
+                    jnp.asarray([n_matched + c0], jnp.int32),
+                    jnp.asarray([n_matched + c0 + len(ctoks)], jnp.int32),
+                )
         last = int(jnp.argmax(logits[0, -1]))
         self.prefix.insert(prompt, pages)
         self.slots[slot] = _Slot(

@@ -37,6 +37,14 @@ class Scheduler:
         """Pages covering ``n_tokens`` positions."""
         return math.ceil(n_tokens / self.pool.page_size)
 
+    def pages_for_range(self, covered_tokens: int, end_tokens: int) -> int:
+        """Fresh pages a prefill *chunk* ending at ``end_tokens`` needs
+        beyond the pages already covering ``covered_tokens`` — the
+        per-chunk charge of chunked prefill: admission reserves the full
+        demand up front (watermark), but pages are drawn from the free
+        list chunk by chunk as the block table grows."""
+        return max(0, self.pages_for(end_tokens) - self.pages_for(covered_tokens))
+
     # ------------------------------------------------------------------
     def _evict_for(self, deficit: int) -> bool:
         """Evict cached prefix chains to cover ``deficit`` pages — but

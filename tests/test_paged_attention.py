@@ -1,6 +1,7 @@
 """paged_attention kernel-op tests: reference-vs-pallas parity (GQA,
-ragged page tails), dispatch resolution, dequant-on-gather, and
-nn-level equivalence with the dense ring-buffer decode path."""
+ragged page tails), the chunked-prefill supertile kernel (s > 1, int8
+fused dequant), dispatch resolution, dequant-on-gather, and nn-level
+equivalence with the dense ring-buffer decode path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,6 +12,7 @@ from repro.configs.base import AttnConfig
 from repro.kernels.paged_attention import (
     gather_pages,
     paged_attention_decode,
+    paged_attention_prefill,
     paged_attention_ref,
 )
 from repro.nn import attention as attn
@@ -113,30 +115,57 @@ def test_dispatch_resolution():
     assert r.backend == "reference"  # off-TPU default
     r = kernels.resolve("paged_attention", shape1, jnp.float32, policy="pallas")
     assert r.schedule == "pallas" and not r.vjp
-    # multi-token (suffix prefill) and int8-scale calls auto-dispatch to
-    # the reference gather even under backend=pallas-preferring default
+    # multi-token (suffix prefill) and int8-scale problems resolve to
+    # the chunked-prefill supertile schedule under forced pallas; the
+    # decode kernel's availability keeps it to s==1 bf16/fp32
     for shape in [(3, 8, 4, 2, 4, 8, 16, 0), (3, 1, 4, 2, 4, 8, 16, 2)]:
-        sched, _ = kernels.op("paged_attention").resolve(
-            kernels.Problem(shape, "float32"),
-            kernels.DispatchPolicy(),
+        r = kernels.resolve(
+            "paged_attention", shape, jnp.float32, policy="pallas"
         )
-        assert not (sched.backend == "pallas" and sched.available(
-            kernels.Problem(shape, "float32")
-        ))
+        assert r.schedule == "pallas_prefill" and not r.vjp
+        decode = kernels.op("paged_attention").schedule("pallas")
+        assert not decode.available(kernels.Problem(shape, "float32"))
+    # the supertile schedule autotunes its q-chunk from the problem
+    r = kernels.resolve(
+        "paged_attention", (3, 64, 4, 2, 4, 8, 16, 0), jnp.float32,
+        policy="pallas",
+    )
+    assert r.schedule == "pallas_prefill" and r.cfg.get("qc", 0) >= 1
 
 
-def test_forced_pallas_rejects_unsupported_calls_clearly():
+def test_forced_pallas_runs_prefill_and_int8_calls():
+    """The PR-4-era availability guards are gone: forced backend=pallas
+    multi-token and int8 calls run the supertile kernel and track the
+    reference gather."""
     q, kp, vp, table, lengths = _setup()
+    q8 = jnp.broadcast_to(q, (q.shape[0], 8, *q.shape[2:]))
+    want = paged_attention_ref(q8, kp, vp, table, lengths - 8, lengths)
+    got = kernels.op("paged_attention")(
+        q8, kp, vp, table, lengths - 8, lengths, policy="pallas"
+    )
+    valid = np.asarray(lengths) - np.asarray(lengths - 8)
+    for bi, n in enumerate(valid):
+        np.testing.assert_allclose(
+            np.asarray(got[bi, :n]), np.asarray(want[bi, :n]),
+            rtol=1e-5, atol=1e-5,
+        )
     kq, ks = kvquant.quantize_kv(kp)
     vq, vs = kvquant.quantize_kv(vp)
-    with pytest.raises(ValueError, match="dequant scales"):
+    want8 = paged_attention_ref(
+        q, kq, vq, table, lengths - 1, lengths, k_scale=ks, v_scale=vs
+    )
+    got8 = kernels.op("paged_attention")(
+        q, kq, vq, table, lengths - 1, lengths, ks, vs, policy="pallas"
+    )
+    np.testing.assert_allclose(
+        np.asarray(got8, np.float32), np.asarray(want8, np.float32),
+        rtol=1e-2, atol=1e-2,  # the reference rounds its output to bf16
+    )
+    # forcing the decode schedule BY NAME on a multi-token problem is
+    # still a clear error (it would silently drop tokens otherwise)
+    with pytest.raises(ValueError, match="pallas_prefill"):
         kernels.op("paged_attention")(
-            q, kq, vq, table, lengths - 1, lengths, ks, vs, policy="pallas"
-        )
-    q8 = jnp.broadcast_to(q, (q.shape[0], 8, *q.shape[2:]))
-    with pytest.raises(ValueError, match="query tokens"):
-        kernels.op("paged_attention")(
-            q8, kp, vp, table, lengths - 8, lengths, policy="pallas"
+            q8, kp, vp, table, lengths - 8, lengths, policy="schedule=pallas"
         )
 
 
@@ -167,6 +196,112 @@ def test_dequant_on_gather_matches_dequantized_pages():
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32),
         rtol=1e-2, atol=1e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill supertile kernel (s > 1, int8 fused dequant)
+# ---------------------------------------------------------------------------
+
+
+def _prefill_setup(b=3, h=4, kvh=2, d=16, ps=8, num_pages=16, s=8, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (kvh, num_pages, ps, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (kvh, num_pages, ps, d), jnp.float32)
+    table = jnp.array([[1, 2, 3, 4], [5, 6, 7, 0], [8, 9, 0, 0]][:b], jnp.int32)
+    lengths = jnp.array([29, 23, 9][:b], jnp.int32)
+    start = lengths - jnp.array([5, 8, 3][:b], jnp.int32)  # ragged suffixes
+    return q, kp, vp, table, start, lengths
+
+
+@pytest.mark.parametrize("kvh", [1, 2, 4])  # MQA / GQA / MHA
+def test_prefill_kernel_matches_reference_gqa(kvh):
+    q, kp, vp, table, start, lengths = _prefill_setup(kvh=4)
+    kp, vp = kp[:kvh], vp[:kvh]
+    ref = paged_attention_ref(q, kp, vp, table, start, lengths)
+    got = paged_attention_prefill(
+        q, kp, vp, table, start, lengths, interpret=True
+    )
+    for bi in range(q.shape[0]):
+        n = int(lengths[bi] - start[bi])  # rows past the true suffix are
+        got_b, ref_b = got[bi, :n], ref[bi, :n]  # discarded upstream
+        np.testing.assert_allclose(
+            np.asarray(got_b), np.asarray(ref_b), rtol=1e-5, atol=1e-5
+        )
+
+
+@pytest.mark.parametrize("qc", [1, 2, 3, 8])  # incl. non-dividing chunks
+def test_prefill_kernel_chunk_sizes_and_softcap(qc):
+    q, kp, vp, table, start, lengths = _prefill_setup()
+    ref = paged_attention_ref(q, kp, vp, table, start, lengths, softcap=8.0)
+    got = paged_attention_prefill(
+        q, kp, vp, table, start, lengths, softcap=8.0, qc=qc, interpret=True
+    )
+    for bi in range(q.shape[0]):
+        n = int(lengths[bi] - start[bi])
+        np.testing.assert_allclose(
+            np.asarray(got[bi, :n]), np.asarray(ref[bi, :n]),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def test_prefill_kernel_int8_fused_dequant():
+    """int8 pages + per-slot scales dequantise in-kernel on the gather,
+    tracking the reference backend's dequant-on-gather (which rounds its
+    output through bf16 — hence the bf16-level tolerance)."""
+    q, kp, vp, table, start, lengths = _prefill_setup()
+    kq, ks = kvquant.quantize_kv(kp)
+    vq, vs = kvquant.quantize_kv(vp)
+    ref = paged_attention_ref(
+        q, kq, vq, table, start, lengths, k_scale=ks, v_scale=vs
+    )
+    got = paged_attention_prefill(
+        q, kq, vq, table, start, lengths, k_scale=ks, v_scale=vs, qc=4,
+        interpret=True,
+    )
+    for bi in range(q.shape[0]):
+        n = int(lengths[bi] - start[bi])
+        np.testing.assert_allclose(
+            np.asarray(got[bi, :n], np.float32),
+            np.asarray(ref[bi, :n], np.float32),
+            rtol=1e-2, atol=1e-2,
+        )
+
+
+def test_prefill_kernel_s1_matches_decode_kernel():
+    """On the decode problem (s == 1) the supertile kernel degenerates to
+    the decode kernel's math exactly."""
+    q, kp, vp, table, lengths = _setup()
+    dec = paged_attention_decode(
+        q[:, 0], kp, vp, table, lengths - 1, lengths, interpret=True
+    )
+    pre = paged_attention_prefill(
+        q, kp, vp, table, lengths - 1, lengths, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(pre[:, 0]), np.asarray(dec), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_prefill_kernel_chunked_calls_match_one_shot():
+    """Chunked-vs-contiguous oracle at the kernel level: running the
+    suffix as separate per-chunk kernel calls (each at its true start
+    position) equals the one-shot call with the same q-chunk — chunk
+    boundaries are invisible to the supertile grid."""
+    q, kp, vp, table, start, lengths = _prefill_setup(b=1, s=8)
+    one = paged_attention_prefill(
+        q, kp, vp, table, start, lengths, qc=4, interpret=True
+    )
+    parts = [
+        paged_attention_prefill(
+            q[:, c0 : c0 + 4], kp, vp, table, start + c0, lengths,
+            qc=4, interpret=True,
+        )
+        for c0 in (0, 4)
+    ]
+    np.testing.assert_array_equal(
+        np.asarray(jnp.concatenate(parts, axis=1)), np.asarray(one)
     )
 
 
@@ -239,6 +374,40 @@ def test_paged_decode_rejects_windows():
             block_table=jnp.zeros((1, 2), jnp.int32),
             lengths=jnp.ones((1,), jnp.int32), window=16,
         )
+
+
+@pytest.mark.parametrize("chunk", [1, 3, 4])
+def test_nn_chunked_suffix_prefill_matches_one_shot(chunk):
+    """Chunked-vs-contiguous oracle at the attention level: feeding a
+    suffix through ``paged_decode_attention`` in chunks leaves the page
+    pool bitwise-identical to the one-shot call, and each token's output
+    matches (the engine's chunked-prefill correctness argument)."""
+    cfg, params = _attn_setup()
+    b, ps, width, start, total = 1, 8, 4, 10, 21  # 11-token ragged suffix
+    table = jnp.array([[1, 2, 3]], jnp.int32)
+    x = jax.random.normal(KEY, (b, total - start, 32), jnp.float32)
+
+    one = attn.init_paged_cache(8, ps, cfg)
+    out_one, one = attn.paged_decode_attention(
+        params, x, one, cfg, index=jnp.int32(start),
+        block_table=table, lengths=jnp.asarray([total], jnp.int32),
+    )
+    chunked = attn.init_paged_cache(8, ps, cfg)
+    outs = []
+    for c0 in range(0, total - start, chunk):
+        xc = x[:, c0 : c0 + chunk]
+        o, chunked = attn.paged_decode_attention(
+            params, xc, chunked, cfg, index=jnp.int32(start + c0),
+            block_table=table,
+            lengths=jnp.asarray([start + c0 + xc.shape[1]], jnp.int32),
+        )
+        outs.append(o)
+    for a, c in zip(jax.tree.leaves(one), jax.tree.leaves(chunked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1), np.float32),
+        np.asarray(out_one, np.float32), rtol=1e-5, atol=1e-5,
+    )
 
 
 def test_quant_paged_tracks_bf16_paged():

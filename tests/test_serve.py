@@ -183,6 +183,74 @@ def test_fork_copy_on_write(small):
     assert done[0] == done[1]  # identical state -> identical greedy tokens
 
 
+@pytest.mark.parametrize("chunk", [2, 3, 16])
+def test_chunked_prefill_matches_dense_and_unchunked(small, chunk):
+    """Chunked suffix prefill is invisible: any chunk size produces the
+    exact token streams of the unchunked paged engine (and of the dense
+    fallback on this workload)."""
+    cfg, params = small
+    reqs = _mk_requests(cfg, shared_prefix=32, n=4)
+    dense = {r.rid: r.out for r in
+             Server(cfg, params, max_batch=2, cache_len=64).run(_clone(reqs))}
+    un = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8)
+    unchunked = {r.rid: r.out for r in un.run(_clone(reqs))}
+    assert unchunked == dense
+    eng = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8,
+                      prefill_chunk=chunk)
+    chunked = {r.rid: r.out for r in eng.run(_clone(reqs))}
+    assert chunked == unchunked
+    # chunking must not change the page accounting either
+    assert eng.pool.stats.allocated == un.pool.stats.allocated
+    assert eng.stats()["prefix_hit_tokens"] == un.stats()["prefix_hit_tokens"]
+
+
+def test_chunked_prefill_int8_matches_unchunked_int8(small):
+    cfg, params = small
+    reqs = _mk_requests(cfg, shared_prefix=32, n=4)
+    a = {r.rid: r.out for r in
+         PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8,
+                     kv_dtype="int8").run(_clone(reqs))}
+    b = {r.rid: r.out for r in
+         PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8,
+                     kv_dtype="int8", prefill_chunk=3).run(_clone(reqs))}
+    assert a == b
+
+
+def test_preemption_mid_chunked_prefill_bit_identical(small):
+    """A request admitted via chunked prefill survives a preempt/restore
+    cycle bit-identically — the per-chunk page charging leaves the same
+    pages behind as the one-shot path."""
+    cfg, params = small
+    eng = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8,
+                      prefill_chunk=2)
+    reqs = _mk_requests(cfg, shared_prefix=16, n=2, max_new=6)
+    assert eng._admit(reqs[0]) and eng._admit(reqs[1])  # req 1 chunked in
+    slot = 1
+    st = eng.slots[slot]
+    n_pages = len(st.pages)
+    before = jax.device_get(
+        eng._gather_pages(eng.caches, eng._pages_ids_fixed(st.pages))
+    )
+    eng._preempt(slot)
+    # dirty the freed pages: restore must come from the host copy
+    got = eng.pool.alloc(n_pages)
+    eng.caches = eng._scatter_pages(
+        eng.caches, eng._pages_ids_fixed(got),
+        jax.tree.map(lambda a: np.full_like(a, -1),
+                     jax.device_get(eng._gather_pages(
+                         eng.caches, eng._pages_ids_fixed(got)))),
+    )
+    eng.pool.release(got)
+    assert eng._swap_in(slot, reqs[1])
+    after = jax.device_get(
+        eng._gather_pages(
+            eng.caches, eng._pages_ids_fixed(eng.slots[slot].pages)
+        )
+    )
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a[:, :, :n_pages], b[:, :, :n_pages])
+
+
 def test_paged_engine_int8_pages_serve(small):
     cfg, params = small
     reqs = _mk_requests(cfg, n=3, max_new=4)
