@@ -13,6 +13,11 @@ interpret-mode timings for the forced-pallas kernel rows):
 * ``kernel_paged_decode_int8``    — the same decode workload on int8
   pages (dequant-on-gather): the halved-HBM serving configuration must
   not regress relative to its bf16 sibling.
+* ``kernel_serve_guard_overhead`` — the bf16 decode workload with the
+  PR-6 robustness guards armed (``kv_guard`` fingerprints +
+  ``kernel_fallback`` non-finite check and undonated cache buffers);
+  the derived column reports the overhead vs. the unguarded row and
+  asserts it stays under 5%.
 * ``kernel_serve_prefill_cold``   — admission latency for a cold
   (prefix-miss) prompt: the whole prompt runs through the model.
 * ``kernel_serve_prefill_hit``    — admission latency for a prompt
@@ -69,18 +74,18 @@ def run(only: str | None = None) -> list[str]:
     rng = np.random.default_rng(0)
     prefix = list(rng.integers(0, cfg.vocab, size=PREFIX_LEN))
 
-    def mk_engine(batch=8, kv_dtype="bf16"):
+    def mk_engine(batch=8, kv_dtype="bf16", **guard_kw):
         # pool sized to the workload: per-call latency includes one
         # functional rewrite of the pools, so a vastly oversized pool
         # would benchmark memcpy instead of serving
         return PagedEngine(
             cfg, params, max_batch=batch, cache_len=1024, page_size=PAGE_SIZE,
-            num_pages=384, kv_dtype=kv_dtype,
+            num_pages=384, kv_dtype=kv_dtype, **guard_kw,
         )
 
-    def decode_row(kv_dtype: str) -> tuple[float, float]:
+    def decode_row(kv_dtype: str, **guard_kw) -> tuple[float, float]:
         """(best_us, tok/s) for 8 shared-prefix requests decoding."""
-        eng = mk_engine(kv_dtype=kv_dtype)
+        eng = mk_engine(kv_dtype=kv_dtype, **guard_kw)
         reqs = [
             Request(rid=i,
                     prompt=prefix + list(rng.integers(0, cfg.vocab,
@@ -110,13 +115,29 @@ def run(only: str | None = None) -> list[str]:
         return best * 1e6, 8 * DECODE_STEPS_PER_CALL / best
 
     # -- decode throughput: 8 requests sharing the 512-token prefix ---------
-    if want("kernel_serve_paged_decode"):
+    if want("kernel_serve_paged_decode", "kernel_serve_guard_overhead"):
         decode_us, toks_per_s = decode_row("bf16")
-        rows["kernel_serve_paged_decode"] = (
-            f"kernel_serve_paged_decode,{decode_us:.1f},"
-            f"b8 ctx~{PREFIX_LEN + SUFFIX_LEN} {DECODE_STEPS_PER_CALL} steps "
-            f"-> {toks_per_s:.0f} tok/s (paged pool ps={PAGE_SIZE})"
-        )
+        if want("kernel_serve_paged_decode"):
+            rows["kernel_serve_paged_decode"] = (
+                f"kernel_serve_paged_decode,{decode_us:.1f},"
+                f"b8 ctx~{PREFIX_LEN + SUFFIX_LEN} {DECODE_STEPS_PER_CALL} "
+                f"steps -> {toks_per_s:.0f} tok/s (paged pool ps={PAGE_SIZE})"
+            )
+        if want("kernel_serve_guard_overhead"):
+            # same workload with every PR-6 detector armed: chain
+            # fingerprints (admission-time, not in this loop's hot path),
+            # the per-step non-finite logits check, and undonated cache
+            # buffers (the price of keeping fallback retries possible)
+            guard_us, _ = decode_row(
+                "bf16", kv_guard=True, kernel_fallback=True
+            )
+            overhead = (guard_us - decode_us) / decode_us * 100.0
+            assert overhead < 5.0, (guard_us, decode_us, overhead)
+            rows["kernel_serve_guard_overhead"] = (
+                f"kernel_serve_guard_overhead,{guard_us:.1f},"
+                f"decode with kv-guard + kernel-fallback armed: "
+                f"{overhead:+.1f}% vs unguarded (gate <5%)"
+            )
 
     if want("kernel_paged_decode_int8"):
         int8_us, int8_tps = decode_row("int8")

@@ -11,16 +11,21 @@ from repro.kernels.api import (  # noqa: F401
     BACKENDS,
     POLICY_ENV_VAR,
     DispatchPolicy,
+    FallbackStats,
     KernelOp,
     Problem,
     Resolution,
     Schedule,
+    all_finite,
+    call_with_fallback,
+    fallback_stats,
     get_policy,
     grouped_linear,
     linear,
     op,
     ops,
     register,
+    reset_fallback_stats,
     resolve,
     set_policy,
     use_policy,

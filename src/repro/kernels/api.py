@@ -1042,6 +1042,81 @@ register(KernelOp(
 
 
 # ---------------------------------------------------------------------------
+# degradation: retry-once-on-reference kernel fallback
+# ---------------------------------------------------------------------------
+#
+# Serving robustness (repro.serve): a pallas kernel call that raises —
+# or, under the opt-in numeric check, produces NaN/Inf — is retried
+# exactly once on the reference backend of the same op instead of
+# crashing the whole batch.  The mechanism lives here (next to the
+# dispatch it guards); the *policy* of when to arm it is the caller's
+# (`PagedEngine(kernel_fallback=True)`, `--kernel-fallback`).  Fallbacks
+# are counted so a degraded-but-alive server is visible in stats rather
+# than silently slow.
+
+
+@dataclasses.dataclass
+class FallbackStats:
+    """Cumulative counters for :func:`call_with_fallback`."""
+
+    calls: int = 0  # guarded calls attempted
+    fallbacks: int = 0  # calls that completed on the reference retry
+    raised: int = 0  # primary raised an exception
+    numeric_trips: int = 0  # primary returned non-finite output
+    last_error: str | None = None
+
+
+_FALLBACK_STATS = FallbackStats()
+
+
+def fallback_stats() -> FallbackStats:
+    """Snapshot of the process-wide fallback counters."""
+    return dataclasses.replace(_FALLBACK_STATS)
+
+
+def reset_fallback_stats() -> None:
+    global _FALLBACK_STATS
+    _FALLBACK_STATS = FallbackStats()
+
+
+def all_finite(*arrays) -> bool:
+    """Opt-in output guard: True iff every float array is NaN/Inf-free.
+    Host-synchronising by design — callers run it at batch boundaries
+    (the serving engine already syncs there to read the sampled token),
+    never inside a jit trace."""
+    for a in arrays:
+        if jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating):
+            if not bool(jnp.isfinite(a).all()):
+                return False
+    return True
+
+
+def call_with_fallback(primary, reference, *args, check=None):
+    """Run ``primary(*args)``; on an exception — or, when ``check`` is
+    given, on ``check(out)`` returning False — run ``reference(*args)``
+    once and return its result instead.
+
+    Returns ``(out, fell_back)``.  The reference retry is *not* guarded:
+    if the oracle backend also fails, the problem is not a kernel
+    mis-dispatch and the error propagates.  Callers must not donate the
+    input buffers to ``primary`` (a failed primary would leave nothing
+    for the retry to consume)."""
+    _FALLBACK_STATS.calls += 1
+    try:
+        out = primary(*args)
+    except Exception as e:  # noqa: BLE001 — any kernel failure degrades
+        _FALLBACK_STATS.raised += 1
+        _FALLBACK_STATS.last_error = f"{type(e).__name__}: {e}"
+    else:
+        if check is None or check(out):
+            return out, False
+        _FALLBACK_STATS.numeric_trips += 1
+        _FALLBACK_STATS.last_error = "non-finite kernel output"
+    _FALLBACK_STATS.fallbacks += 1
+    return reference(*args), True
+
+
+# ---------------------------------------------------------------------------
 # deprecation shim support (the old per-kernel ops.py entry points)
 # ---------------------------------------------------------------------------
 

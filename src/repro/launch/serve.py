@@ -151,6 +151,14 @@ def main() -> None:
     ap.add_argument("--kernel-policy", default=None,
                     help='kernel dispatch policy, e.g. "tiled" or '
                          '"backend=reference" (see repro.kernels.api)')
+    ap.add_argument("--kv-guard", action="store_true",
+                    help="paged: fingerprint cached page chains and verify "
+                         "them at every sharing point / swap-in (corrupted "
+                         "chains are quarantined, not multicast)")
+    ap.add_argument("--kernel-fallback", action="store_true",
+                    help="paged: retry a raising or non-finite kernel step "
+                         "once on the reference backend (disables cache-"
+                         "buffer donation to keep retry inputs alive)")
     args = ap.parse_args()
 
     if args.kernel_policy:
@@ -162,6 +170,7 @@ def main() -> None:
             cfg, params, max_batch=args.max_batch, page_size=args.page_size,
             num_pages=args.pages, kv_dtype=args.kv_dtype,
             prefill_chunk=args.prefill_chunk,
+            kv_guard=args.kv_guard, kernel_fallback=args.kernel_fallback,
         )
     else:
         server = Server(cfg, params, max_batch=args.max_batch)

@@ -3,16 +3,27 @@
 ``pagepool``  — refcounted page allocator (free list, COW, stats),
 ``prefix``    — radix-tree prefix cache mapping token prefixes to shared
                 page chains (LRU eviction),
-``scheduler`` — admission / reclamation / preemption policy,
+``scheduler`` — admission / reclamation / preemption policy (typed
+                ``Rejected`` verdicts),
 ``engine``    — the paged continuous-batching engine tying them to the
-                model layer and the ``paged_attention`` kernel op.
+                model layer and the ``paged_attention`` kernel op,
+``faults``    — deterministic fault-injection plans for chaos testing,
+``guard``     — pool invariant auditor + per-page content fingerprints.
 """
 from repro.serve.engine import (  # noqa: F401
+    MAX_DEGRADE_REQUEUES,
     PagedEngine,
     Request,
     bucket_len,
     pad_to_bucket,
 )
+from repro.serve.faults import Fault, FaultPlan, InjectedFault  # noqa: F401
+from repro.serve.guard import (  # noqa: F401
+    GuardViolation,
+    PageFingerprints,
+    blob_checksum,
+    check_pool,
+)
 from repro.serve.pagepool import NULL_PAGE, PagePool, PoolStats  # noqa: F401
 from repro.serve.prefix import PrefixCache  # noqa: F401
-from repro.serve.scheduler import Scheduler  # noqa: F401
+from repro.serve.scheduler import Rejected, Scheduler  # noqa: F401

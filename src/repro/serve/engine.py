@@ -31,24 +31,66 @@ Owns the device side of paged serving and executes the
 * **copy-on-write**: a fork shares every page of its parent; the first
   divergent write to a shared page gets a private copy
   (``PagePool.cow`` + one device page copy).
+
+Failure behavior (PR 6): the multicast design concentrates blast
+radius — one bad chain or dry pool touches every request sharing the
+prefix — so the engine degrades instead of crashing:
+
+* admission that cannot proceed returns a **typed**
+  :class:`~repro.serve.scheduler.Rejected` (``no-free-slot`` /
+  ``watermark`` / ``pool-dry``) rather than silently stalling the queue
+  head,
+* a lost or corrupted preemption swap blob is detected before the
+  scatter and the request is **re-prefilled from its own token stream**
+  (prompt + generated tokens — greedy decode makes the replay
+  token-identical) instead of restoring garbage,
+* a mid-decode allocation or COW failure with nothing left to reclaim
+  **requeues the slot** (bounded by ``MAX_DEGRADE_REQUEUES``, after
+  which the request fails with a typed error) instead of raising,
+* with ``kv_guard=True``, page chains are **fingerprinted** when they
+  enter the prefix tree and verified at every sharing point: a
+  corrupted chain is quarantined (dropped from the tree, readers
+  requeued for replay) so it stops multicasting instead of poisoning
+  every later consumer,
+* with ``kernel_fallback=True``, a kernel dispatch that raises — or
+  returns non-finite logits — is retried once on the reference backend
+  of the same step (``kernels.call_with_fallback``) with a counted
+  ``fallback`` stat.
+
+All detectors are off-by-default flags; with both flags off and no
+armed :class:`~repro.serve.faults.FaultPlan`, every code path is the
+pre-existing one (CI diffs the token streams).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import kernels
 from repro.models import lm
 from repro.nn import kvquant
 from repro.nn.attention import PagedKvCache
+from repro.serve import faults, guard
 from repro.serve.pagepool import PagePool
 from repro.serve.prefix import PrefixCache
-from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import Rejected, Scheduler
 
 _PAGED = (PagedKvCache, kvquant.QuantPagedKvCache)
+
+# a degraded slot (COW/alloc failure, lost swap, quarantine) re-enters
+# the queue this many times before the request is failed with a typed
+# error — the bound that turns a persistent fault into a clean rejection
+# instead of an admission/preemption livelock
+MAX_DEGRADE_REQUEUES = 8
+
+# sentinel: _swap_in found the swap blob missing/corrupt (distinct from
+# an admission Rejected — the caller degrades to a replay re-prefill)
+_SWAP_LOST = object()
 
 
 @dataclasses.dataclass
@@ -57,8 +99,16 @@ class Request:
     prompt: list[int]
     max_new: int
     out: list[int] = dataclasses.field(default_factory=list)
-    # preemption swap state: (host page-data tree, n_pages, length, last_tok)
+    # set when the engine permanently fails the request (typed reason);
+    # failed requests are collected in PagedEngine.failed, never in run()'s
+    # completed list
+    error: str | None = None
+    # preemption swap state:
+    # (host page-data tree | None, n_pages, length, last_tok, checksum | None)
     _swap: tuple | None = dataclasses.field(default=None, repr=False)
+    # degrade-requeue count (quarantine / lost swap / alloc+COW failure);
+    # victim preemptions under memory pressure are normal and don't count
+    _requeues: int = dataclasses.field(default=0, repr=False)
 
 
 def bucket_len(n: int, bucket: int = 16) -> int:
@@ -101,7 +151,8 @@ class PagedEngine:
     def __init__(self, cfg, params, *, max_batch: int = 4, cache_len: int = 256,
                  page_size: int = 16, num_pages: int | None = None,
                  kv_dtype: str = "bf16", watermark: int = 2,
-                 prompt_bucket: int = 16, prefill_chunk: int | None = None):
+                 prompt_bucket: int = 16, prefill_chunk: int | None = None,
+                 kv_guard: bool = False, kernel_fallback: bool = False):
         if cache_len % page_size:
             raise ValueError("cache_len must be a multiple of page_size")
         if prefill_chunk is not None and prefill_chunk < 1:
@@ -134,22 +185,34 @@ class PagedEngine:
         self.n_preempted = 0
         self.n_cow = 0
 
+        # degradation state: detectors are opt-in flags; the counters
+        # below surface in stats() so a degraded-but-alive server is
+        # visible rather than silently slow
+        self.kv_guard = kv_guard
+        self.kernel_fallback = kernel_fallback
+        self.fp = guard.PageFingerprints() if kv_guard else None
+        self.failed: list[Request] = []  # permanently failed (typed error)
+        self.rejections: Counter[str] = Counter()
+        self.n_fallback = 0
+        self.n_swap_dropped = 0
+        self.n_quarantined_pages = 0
+        self.n_degrade_requeues = 0
+
         # every jit that rewrites the page pools donates the cache
         # buffers: the engine always replaces self.caches with the
         # result, so XLA may update the (potentially large) pools in
-        # place instead of copying them per call (a no-op on CPU)
-        self._decode = jax.jit(
-            lambda p, c, t, i, bt, ln: lm.decode_step(
-                p, cfg, c, t, i, block_table=bt, lengths=ln
-            ),
-            donate_argnums=(1,),
-        )
+        # place instead of copying them per call (a no-op on CPU).
+        # With the kernel fallback armed, nothing is donated — a failed
+        # primary call must leave its inputs intact for the reference
+        # retry (part of the measured guard overhead).
+        donate = () if kernel_fallback else (1,)
+
+        def decode(p, c, t, i, bt, ln):
+            return lm.decode_step(p, cfg, c, t, i, block_table=bt, lengths=ln)
 
         def cold_prefill(p, caches, toks, li, table_row, length):
             logits, dense = lm.prefill(p, cfg, toks, logit_index=li)
             return logits, lm.prefill_to_pages(dense, caches, table_row, length)
-
-        self._cold_prefill = jax.jit(cold_prefill, donate_argnums=(1,))
 
         def suffix_prefill(p, caches, toks, li, table, index, length):
             logits, new_caches = lm.decode_step(
@@ -158,7 +221,15 @@ class PagedEngine:
             sel = jax.lax.dynamic_slice_in_dim(logits, li, 1, axis=1)
             return sel, new_caches
 
-        self._suffix_prefill = jax.jit(suffix_prefill, donate_argnums=(1,))
+        self._builders = {
+            "decode": decode,
+            "cold_prefill": cold_prefill,
+            "suffix_prefill": suffix_prefill,
+        }
+        self._decode = jax.jit(decode, donate_argnums=donate)
+        self._cold_prefill = jax.jit(cold_prefill, donate_argnums=donate)
+        self._suffix_prefill = jax.jit(suffix_prefill, donate_argnums=donate)
+        self._ref_jits: dict[str, object] = {}  # lazy reference-backend twins
 
         def copy_page(caches, src, dst):
             return _page_tree_map(
@@ -201,39 +272,114 @@ class PagedEngine:
         swap gather/scatter jits compile once, not once per page count."""
         return jnp.asarray(self._table_row(pages))
 
+    # -- guarded kernel dispatch --------------------------------------------
+    def _ref_variant(self, name):
+        """Reference-backend twin of a jitted model step, traced lazily
+        under a forced ``reference`` policy (same math as the pre-kernel
+        call sites) and never donating — the retry target of
+        ``kernels.call_with_fallback``."""
+        fn = self._ref_jits.get(name)
+        if fn is None:
+            jfn = jax.jit(self._builders[name])
+
+            def fn(*args, _jfn=jfn):
+                with kernels.use_policy("reference"):
+                    return jfn(*args)
+
+            self._ref_jits[name] = fn
+        return fn
+
+    def _dispatch(self, name, *args):
+        """Run one jitted model step (``decode`` / ``cold_prefill`` /
+        ``suffix_prefill``) through the fault-injection sites and — when
+        ``kernel_fallback`` is armed — the retry-once-on-reference path
+        with the opt-in non-finite-logits check."""
+        primary_fn = getattr(self, f"_{name}")
+
+        def primary(*a):
+            if faults.fires("kernel.raise") is not None:
+                raise faults.InjectedFault(f"injected kernel fault in {name}")
+            out = primary_fn(*a)
+            if faults.fires("kernel.nan") is not None:
+                out = (jnp.full_like(out[0], jnp.nan), out[1])
+            return out
+
+        if not self.kernel_fallback:
+            return primary(*args)
+        out, fell_back = kernels.call_with_fallback(
+            primary, self._ref_variant(name), *args,
+            check=lambda o: kernels.all_finite(o[0]),
+        )
+        if fell_back:
+            self.n_fallback += 1
+        return out
+
     # -- admission ----------------------------------------------------------
-    def _admit(self, req: Request) -> bool:
+    def _reject(self, rej: Rejected) -> Rejected:
+        self.rejections[rej.reason] += 1
+        return rej
+
+    def _admit(self, req: Request) -> bool | Rejected:
+        """Admit a queued request: ``True`` on success, a falsy typed
+        :class:`Rejected` otherwise (existing ``while queue and
+        self._admit(...)`` loops keep working; callers that care read
+        the reason)."""
         slot = self._free_slot()
         if slot is None:
-            return False
+            return self._reject(Rejected("no-free-slot"))
         if req._swap is not None:
-            return self._swap_in(slot, req)
-        prompt = req.prompt
-        if len(prompt) + req.max_new + 1 > self.cache_len:
+            res = self._swap_in(slot, req)
+            if res is not _SWAP_LOST:
+                return res
+            # the swap blob was dropped or failed its checksum: the KV
+            # bytes are gone, but the token stream is not — fall through
+            # and re-prefill from prompt + generated tokens (greedy
+            # decode makes the replay token-identical)
+            self.n_swap_dropped += 1
+            req._swap = None
+        replay = bool(req.out)
+        tokens = req.prompt + req.out[:-1] if replay else req.prompt
+        if len(req.prompt) + req.max_new + 1 > self.cache_len:
             raise ValueError(
                 f"request {req.rid}: prompt+max_new exceeds cache_len "
                 f"{self.cache_len}"
             )
+        ref0 = list(self.pool._ref) if self.kv_guard else None
         # match BEFORE the watermark check: the refs it takes pin the
         # chain against can_admit's prefix eviction; a rejected
         # admission fully unwinds it (refs and stats)
-        shared, n_matched = self.prefix.match(prompt)
-        fresh_needed = self.sched.pages_for(len(prompt) + 1) - len(shared)
-        if not self.sched.can_admit(fresh_needed):
-            self.prefix.unmatch(shared, len(prompt))
-            return False
+        shared, n_matched = self.prefix.match(tokens)
+        if self.kv_guard and shared:
+            bad = self.fp.verify(self.caches, shared)
+            if bad:
+                # corruption caught at the sharing point: quarantine the
+                # chain (and its poisoned readers) instead of letting it
+                # multicast to this and every later consumer
+                self.prefix.unmatch(shared, len(tokens))
+                self._quarantine(bad)
+                shared, n_matched = [], 0
+                ref0 = list(self.pool._ref) if self.kv_guard else None
+        fresh_needed = self.sched.pages_for(len(tokens) + 1) - len(shared)
+        rej = self.sched.check_admission(fresh_needed)
+        if rej is not None:
+            self.prefix.unmatch(shared, len(tokens))
+            self._assert_refs_unchanged(ref0, "rejected admission")
+            return self._reject(rej)
 
         if n_matched == 0:
             # cold prompt: the dense path's own prefill, scattered into
             # pages — bit-identical bytes to the dense fallback
             fresh = self.pool.alloc(fresh_needed)
-            assert fresh is not None  # can_admit just checked
-            pages = shared + fresh
-            toks = pad_to_bucket(prompt, self.prompt_bucket)
-            logits, self.caches = self._cold_prefill(
+            if fresh is None:  # injected exhaustion after a green check
+                self._assert_refs_unchanged(ref0, "rejected admission")
+                return self._reject(Rejected("pool-dry", fresh_needed))
+            pages = fresh
+            toks = pad_to_bucket(tokens, self.prompt_bucket)
+            logits, self.caches = self._dispatch(
+                "cold_prefill",
                 self.params, self.caches, jnp.asarray(toks),
-                jnp.int32(len(prompt) - 1),
-                jnp.asarray(self._table_row(pages)), jnp.int32(len(prompt)),
+                jnp.int32(len(tokens) - 1),
+                jnp.asarray(self._table_row(pages)), jnp.int32(len(tokens)),
             )
         else:
             # prefix hit: the shared pages are "multicast" to this
@@ -241,56 +387,145 @@ class PagedEngine:
             # suffix runs, attending to the shared pages at its true
             # positions, split into fixed-size chunks when it outgrows
             # ``prefill_chunk`` (each chunk is charged its own pages —
-            # can_admit reserved the full demand, so the draws succeed)
+            # can_admit reserved the full demand, so the draws succeed
+            # unless a fault plan forces exhaustion mid-suffix, which
+            # unwinds the whole admission)
             pages = list(shared)
-            suffix = prompt[n_matched:]
+            suffix = tokens[n_matched:]
             chunk = self.prefill_chunk or len(suffix)
             for c0 in range(0, len(suffix), chunk):
                 ctoks = suffix[c0 : c0 + chunk]
                 last_chunk = c0 + chunk >= len(suffix)
                 # the final chunk also covers the first decode write
-                end = len(prompt) + 1 if last_chunk else n_matched + c0 + len(ctoks)
+                end = len(tokens) + 1 if last_chunk else n_matched + c0 + len(ctoks)
                 need = self.sched.pages_for_range(
                     len(pages) * self.page_size, end
                 )
                 if need:
                     got = self.pool.alloc(need)
-                    assert got is not None  # reserved by can_admit above
+                    if got is None:  # injected mid-suffix exhaustion
+                        fresh_far = [p for p in pages if p not in shared]
+                        if fresh_far:
+                            self.pool.release(fresh_far)
+                        self.prefix.unmatch(shared, len(tokens))
+                        self._assert_refs_unchanged(ref0, "rejected admission")
+                        return self._reject(Rejected("pool-dry", need))
                     pages.extend(got)
                 toks = pad_to_bucket(ctoks, self.prompt_bucket)
-                logits, self.caches = self._suffix_prefill(
+                logits, self.caches = self._dispatch(
+                    "suffix_prefill",
                     self.params, self.caches, jnp.asarray(toks),
                     jnp.int32(len(ctoks) - 1),
                     jnp.asarray(self._table_row(pages))[None],
                     jnp.asarray([n_matched + c0], jnp.int32),
                     jnp.asarray([n_matched + c0 + len(ctoks)], jnp.int32),
                 )
-        last = int(jnp.argmax(logits[0, -1]))
-        self.prefix.insert(prompt, pages)
+        self.prefix.insert(tokens, pages)
+        n_tree = len(tokens) // self.page_size
+        if self.kv_guard and n_tree:
+            self.fp.record(self.caches, pages[:n_tree])
+        f = faults.fires("page.corrupt")
+        if f is not None and n_tree:
+            # flip bytes in one page of the chain this admission cached:
+            # the corruption a later prefix hit must detect
+            self._corrupt_page(pages[min(f.page_index, n_tree - 1)])
         self.slots[slot] = _Slot(
-            req=req, pages=pages, length=len(prompt), last_tok=last,
+            req=req, pages=pages, length=len(tokens),
+            last_tok=req.out[-1] if replay else int(jnp.argmax(logits[0, -1])),
             admit_seq=self._admit_seq,
         )
         self._admit_seq += 1
-        req.out.append(last)
+        if not replay:
+            req.out.append(self.slots[slot].last_tok)
         return True
+
+    def _assert_refs_unchanged(self, ref0, what: str) -> None:
+        """kv_guard regression net: a ``what`` path must leave every
+        refcount exactly as found."""
+        if ref0 is not None and ref0 != self.pool._ref:
+            delta = {
+                pid: (a, b)
+                for pid, (a, b) in enumerate(zip(ref0, self.pool._ref))
+                if a != b
+            }
+            raise guard.GuardViolation(
+                f"{what} changed page refcounts: {delta} (page: (before, after))"
+            )
+
+    def _corrupt_page(self, pid: int) -> None:
+        """Injected corruption (``page.corrupt``): perturb one element of
+        every array of page ``pid`` — the single-bit-flip stand-in the
+        fingerprint verify must catch."""
+        def flip(c):
+            return type(c)(*[
+                a.at[(slice(None), slice(None), pid) + (0,) * (a.ndim - 3)]
+                .add(jnp.asarray(1, a.dtype).astype(a.dtype))
+                for a in c
+            ])
+
+        self.caches = _page_tree_map(flip, self.caches)
+
+    def _quarantine(self, bad_pages: list[int]) -> None:
+        """Drop the corrupted chain from the prefix tree and requeue any
+        running slot still reading one of its pages (their replay
+        re-prefills from tokens — correct bytes — so only the chain is
+        lost, not its consumers)."""
+        dropped = self.prefix.drop(bad_pages)
+        self.fp.forget(dropped)
+        self.n_quarantined_pages += len(dropped)
+        poisoned = set(bad_pages)
+        for slot, st in list(self.slots.items()):
+            if poisoned & set(st.pages):
+                self._requeue_degraded(slot, "quarantined page in block table")
+
+    def _requeue_degraded(self, slot: int, why: str) -> None:
+        """Degradation path shared by quarantine and alloc/COW failure:
+        free the slot's pages and send the request back to the queue as
+        a replay (no swap blob — it re-prefills from its own tokens).
+        Bounded: past ``MAX_DEGRADE_REQUEUES`` the request fails with a
+        typed error instead of ping-ponging forever."""
+        st = self.slots.pop(slot)
+        self.pool.release(st.pages)
+        st.req._swap = None
+        st.req._requeues += 1
+        if st.req._requeues > MAX_DEGRADE_REQUEUES:
+            st.req.error = f"degraded too often ({why})"
+            self.failed.append(st.req)
+            return
+        self.n_degrade_requeues += 1
+        self._requeue.append(st.req)
 
     # -- preemption (swap to host) and resume -------------------------------
     def _preempt(self, slot: int) -> None:
         st = self.slots.pop(slot)
         ids = self._pages_ids_fixed(st.pages)
         data = jax.device_get(self._gather_pages(self.caches, ids))
-        st.req._swap = (data, len(st.pages), st.length, st.last_tok)
+        if faults.fires("swap.drop") is not None:
+            data = None  # injected loss of the host swap blob
+        checksum = (
+            guard.blob_checksum(data)
+            if self.kv_guard and data is not None else None
+        )
+        st.req._swap = (data, len(st.pages), st.length, st.last_tok, checksum)
         self.pool.release(st.pages)
         self._requeue.append(st.req)
         self.n_preempted += 1
 
-    def _swap_in(self, slot: int, req: Request) -> bool:
-        data, n_pages, length, last_tok = req._swap
-        if not self.sched.can_admit(n_pages):
-            return False
+    def _swap_in(self, slot: int, req: Request):
+        """Restore a preempted request: ``True``, a typed ``Rejected``,
+        or the ``_SWAP_LOST`` sentinel when the blob is missing/corrupt
+        (the caller degrades to a replay re-prefill)."""
+        data, n_pages, length, last_tok, checksum = req._swap
+        if data is None:
+            return _SWAP_LOST
+        if checksum is not None and guard.blob_checksum(data) != checksum:
+            return _SWAP_LOST
+        rej = self.sched.check_admission(n_pages)
+        if rej is not None:
+            return self._reject(rej)
         pages = self.pool.alloc(n_pages)
-        assert pages is not None
+        if pages is None:  # injected exhaustion after a green check
+            return self._reject(Rejected("pool-dry", n_pages))
         ids = self._pages_ids_fixed(pages)
         self.caches = self._scatter_pages(self.caches, ids, data)
         req._swap = None
@@ -329,19 +564,26 @@ class PagedEngine:
     def _alloc_for_decode(self, n: int, *, exclude: set[int]) -> list[int] | None:
         """Allocate decode pages, escalating: free list -> prefix
         eviction -> preemption of the youngest request not in
-        ``exclude`` (a slot never preempts itself — progress)."""
+        ``exclude`` (a slot never preempts itself via a *victim* pick —
+        progress)."""
         while True:
             if self.sched.reclaim(n):
-                return self.pool.alloc(n)
+                got = self.pool.alloc(n)
+                if got is not None:
+                    return got
+                # an armed fault plan can fail the alloc even after a
+                # green reclaim — fall through to the escalation below
             victim = self._pick_victim(exclude)
             if victim is None:
                 return None
             self._preempt(victim)
 
-    def _ensure_writable(self, slot: int) -> None:
+    def _ensure_writable(self, slot: int) -> bool:
         """Before a decode step writes position ``length``: make sure the
         covering page exists in the slot's table and is exclusively
-        owned (COW)."""
+        owned (COW).  Returns False when the slot could not be made
+        writable and was requeued instead (degradation — the step
+        proceeds without it)."""
         st = self.slots[slot]
         need = st.length // self.page_size
         if need >= self.table_width:
@@ -349,20 +591,19 @@ class PagedEngine:
         if need >= len(st.pages):
             got = self._alloc_for_decode(1, exclude={slot})
             if got is None:
-                raise RuntimeError(
-                    "page pool exhausted with nothing left to evict or "
-                    "preempt — size the pool for at least one full request"
-                )
+                self._requeue_degraded(slot, "page fault with pool exhausted")
+                return False
             st.pages.extend(got)
         elif self.pool.refcount(st.pages[need]) > 1:
             res = self.pool.cow(st.pages[need])
             if res is None:  # pool dry: make room, then retry the COW
                 got = self._alloc_for_decode(1, exclude={slot})
-                if got is None:
-                    raise RuntimeError("page pool exhausted during COW")
-                self.pool.release(got)
-                res = self.pool.cow(st.pages[need])
-                assert res is not None
+                if got is not None:
+                    self.pool.release(got)
+                    res = self.pool.cow(st.pages[need])
+            if res is None:
+                self._requeue_degraded(slot, "COW failure with pool exhausted")
+                return False
             new_id, copied = res
             if copied:
                 self.caches = self._copy_page(
@@ -370,6 +611,7 @@ class PagedEngine:
                 )
                 self.n_cow += 1
             st.pages[need] = new_id
+        return True
 
     # -- main loop ----------------------------------------------------------
     def step(self) -> list[Request]:
@@ -388,7 +630,8 @@ class PagedEngine:
             index[slot] = st.length
             lengths[slot] = st.length + 1
             table[slot] = self._table_row(st.pages)
-        logits, self.caches = self._decode(
+        logits, self.caches = self._dispatch(
+            "decode",
             self.params, self.caches, jnp.asarray(toks), jnp.asarray(index),
             jnp.asarray(table), jnp.asarray(lengths),
         )
@@ -407,20 +650,44 @@ class PagedEngine:
     def run(self, requests: list[Request]) -> list[Request]:
         queue = list(requests)
         done: list[Request] = []
+        stall = 0  # consecutive empty-batch rounds with a rejected head
         while queue or self.slots or self._requeue:
             if self._requeue:  # preempted requests re-enter at the front
                 queue = self._requeue + queue
                 self._requeue = []
-            while queue and self._admit(queue[0]):
+            last_rej: Rejected | bool = True
+            while queue:
+                last_rej = self._admit(queue[0])
+                if not last_rej:
+                    break
                 queue.pop(0)
-            if not self.slots:
-                if queue:
-                    raise RuntimeError(
-                        "pool too small to admit any queued request"
-                    )
+            if self.slots:
+                stall = 0
+                done.extend(self.step())
                 continue
-            done.extend(self.step())
+            if not queue:
+                continue  # degraded requeues merge next round
+            # nothing running and the head was rejected: without faults
+            # this is deterministic — raise immediately; with a plan
+            # armed the rejection may be transient, so retry a bounded
+            # number of rounds before declaring the pool undersized
+            stall += 1
+            if faults.active() is None or stall > 100:
+                raise RuntimeError(
+                    f"pool too small to admit any queued request "
+                    f"(head rejected: {last_rej!r})"
+                )
         return done
+
+    # -- auditing ------------------------------------------------------------
+    def check(self) -> None:
+        """Run the pool auditor with the engine's live holders: every
+        running slot's chain plus the prefix tree's own references.
+        Raises :class:`repro.serve.guard.GuardViolation` on a leaked or
+        dropped reference; green after every step/run by construction."""
+        holders = [st.pages for st in self.slots.values()]
+        holders.append(self.prefix.pages())
+        self.pool.check(holders)
 
     # -- introspection ------------------------------------------------------
     def stats(self) -> dict:
@@ -432,4 +699,10 @@ class PagedEngine:
             "prefix_miss_tokens": self.prefix.miss_tokens,
             "preempted": self.n_preempted,
             "cow_copies": self.n_cow,
+            "rejected": dict(self.rejections),
+            "kernel_fallbacks": self.n_fallback,
+            "swap_dropped": self.n_swap_dropped,
+            "quarantined_pages": self.n_quarantined_pages,
+            "degrade_requeues": self.n_degrade_requeues,
+            "failed": len(self.failed),
         }

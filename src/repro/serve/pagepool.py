@@ -30,6 +30,9 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from typing import Iterable, Sequence
+
+from repro.serve import faults
 
 NULL_PAGE = 0
 
@@ -83,6 +86,8 @@ class PagePool:
             raise ValueError(n)
         if n > len(self._free):
             return None
+        if n and faults.fires("pool.alloc") is not None:
+            return None  # injected exhaustion: same signal as a dry pool
         ids = [self._free.popleft() for _ in range(n)]
         for pid in ids:
             self._ref[pid] = 1
@@ -126,9 +131,23 @@ class PagePool:
             raise ValueError(f"cow of unreferenced page {page_id}")
         if self._ref[page_id] == 1:
             return page_id, False
+        if faults.fires("pool.cow") is not None:
+            return None  # injected COW failure: same signal as a dry pool
         granted = self.alloc(1)
         if granted is None:
             return None
         self.release([page_id])
         self.stats.cow_copies += 1
         return granted[0], True
+
+    # ------------------------------------------------------------------
+    def check(self, holders: Iterable[Sequence[int]] | None = None) -> None:
+        """Audit the pool's invariants (free-list disjointness, refcount
+        vs. free-list consistency, null-page sanity) and — given
+        ``holders``, the live page-id chains (running slots, prefix-tree
+        nodes, in-flight match refs) — an exact refcount cross-count.
+        Raises :class:`repro.serve.guard.GuardViolation` on the first
+        violated invariant; see :mod:`repro.serve.guard`."""
+        from repro.serve.guard import check_pool  # pagepool is imported first
+
+        check_pool(self, holders)

@@ -134,6 +134,45 @@ class PrefixCache:
         """Number of cached pages."""
         return len(self._nodes())
 
+    def pages(self) -> list[int]:
+        """Page ids the tree holds a reference on (one per node) — the
+        tree's contribution to the pool auditor's refcount cross-count
+        (``PagePool.check(holders=...)``)."""
+        return [n.page_id for n in self._nodes()]
+
+    def drop(self, page_ids: Iterable[int]) -> list[int]:
+        """Quarantine: remove every subtree rooted at a node holding one
+        of ``page_ids`` and release the tree's own reference on each
+        removed node's page.  Descendants go too — a chain below a
+        corrupted page was prefilled *against* those bytes, so its K/V
+        is poisoned even if its own pages read back clean.  Returns the
+        page ids whose tree reference was released (pages still shared
+        with running requests stay alive until those release; the tree
+        just stops multicasting them to new consumers)."""
+        bad = set(page_ids)
+        dropped: list[int] = []
+
+        def walk(node: _Node) -> None:
+            for key, child in list(node.children.items()):
+                if child.page_id in bad:
+                    del node.children[key]
+                    for n in self._subtree(child):
+                        self.pool.release([n.page_id])
+                        dropped.append(n.page_id)
+                else:
+                    walk(child)
+
+        walk(self.root)
+        return dropped
+
+    def _subtree(self, node: _Node) -> list[_Node]:
+        out, stack = [], [node]
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            stack.extend(n.children.values())
+        return out
+
     def evictable_pages(self) -> int:
         """How many pages :meth:`evict` could free right now: the union
         of fully refcount-1 subtrees (a refcount-1 node pinned by a

@@ -23,8 +23,36 @@ import dataclasses
 import math
 from typing import Sequence
 
+from repro.serve import faults
 from repro.serve.pagepool import PagePool
 from repro.serve.prefix import PrefixCache
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejected:
+    """Typed admission rejection: *why* the request cannot run now, and
+    how many pages must come free before a retry can succeed.
+
+    Falsy on purpose — ``if not engine._admit(req)`` keeps working while
+    the caller that cares (``PagedEngine.run``, the chaos suite, an
+    upstream admission queue) reads the reason instead of guessing from
+    a silently stalled queue head.
+
+    Reasons:
+
+    * ``"no-free-slot"`` — every batch lane is occupied; pages are not
+      the constraint (``retry_after_pages == 0``).
+    * ``"watermark"``    — the pool could cover the request, but only by
+      dipping into the decode-headroom reserve.
+    * ``"pool-dry"``     — the pool cannot cover the request even at
+      watermark 0 (after any feasible prefix eviction).
+    """
+
+    reason: str
+    retry_after_pages: int = 0
+
+    def __bool__(self) -> bool:
+        return False
 
 
 @dataclasses.dataclass
@@ -53,6 +81,8 @@ class Scheduler:
         would be re-probed every scheduling round)."""
         if deficit <= 0:
             return True
+        if faults.fires("sched.evict") is not None:
+            return False  # injected reclamation failure: nothing evicted
         if self.prefix is None or self.prefix.evictable_pages() < deficit:
             return False
         self.prefix.evict(deficit)
@@ -63,8 +93,23 @@ class Scheduler:
         needs *beyond* what prefix sharing already covers).  Evicts
         cold prefix chains first if — and only if — that unblocks the
         admission."""
-        self._evict_for(new_pages + self.watermark - self.pool.free_pages)
-        return self.pool.free_pages - new_pages >= self.watermark
+        return self.check_admission(new_pages) is None
+
+    def check_admission(self, new_pages: int) -> Rejected | None:
+        """Structured form of :meth:`can_admit`: ``None`` when the
+        request fits (cold prefix chains are evicted first if — and only
+        if — that unblocks it), else a :class:`Rejected` naming the
+        binding constraint.  ``"watermark"`` means the free list could
+        cover the demand but the decode-headroom reserve would be
+        breached; ``"pool-dry"`` means it could not, even at watermark
+        0 — the caller should expect to wait for ``retry_after_pages``
+        pages (or escalate to preemption)."""
+        deficit = new_pages + self.watermark - self.pool.free_pages
+        self._evict_for(deficit)
+        if self.pool.free_pages - new_pages >= self.watermark:
+            return None
+        reason = "pool-dry" if new_pages > self.pool.free_pages else "watermark"
+        return Rejected(reason, new_pages + self.watermark - self.pool.free_pages)
 
     def reclaim(self, n_pages: int) -> bool:
         """Make ``n_pages`` free for a *running* request (decode page

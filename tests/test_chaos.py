@@ -1,0 +1,385 @@
+"""Chaos suite: seeded fault injection against the paged serving stack.
+
+Every test arms a deterministic :class:`repro.serve.FaultPlan`, runs a
+workload, and asserts the *degradation contract* rather than absence of
+failure:
+
+* every admitted request either completes **token-identical** to the
+  fault-free run (recoverable faults: exhaustion, eviction refusal,
+  dropped swap blobs, kernel raise/NaN under fallback, corruption caught
+  before its reader decodes) or is cleanly rejected / failed with a
+  typed reason — never a hang, never a crash, never silent garbage;
+* after every run the pool auditor (``engine.check()`` →
+  ``PagePool.check(holders)``) is green: no leaked or dropped page
+  references, whatever the fault did;
+* the detectors actually detect: plans log what fired, engines count
+  what degraded.
+
+The ``prefill_chunk`` parametrization (ids ``one-shot`` / ``chunked4``)
+mirrors the CI chaos-smoke matrix legs.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import kernels
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import (
+    MAX_DEGRADE_REQUEUES,
+    Fault,
+    FaultPlan,
+    InjectedFault,
+    PagedEngine,
+    PagePool,
+    Rejected,
+    Request,
+    Scheduler,
+)
+
+pytestmark = pytest.mark.chaos
+
+KEY = jax.random.PRNGKey(0)
+
+# the two engine shapes the CI chaos-smoke matrix runs (-k filters)
+CHUNKS = pytest.mark.parametrize(
+    "chunk", [None, 4], ids=["one-shot", "chunked4"]
+)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = lm.init(cfg, KEY)
+    return cfg, params
+
+
+def _mk_requests(cfg, *, shared_prefix=0, n=4, max_new=5, seed=7):
+    rng = np.random.default_rng(seed)
+    prefix = list(rng.integers(0, cfg.vocab, size=shared_prefix))
+    return [
+        Request(rid=i, prompt=prefix + list(rng.integers(0, cfg.vocab, size=3 + i)),
+                max_new=max_new)
+        for i in range(n)
+    ]
+
+
+def _clone(reqs):
+    return [Request(rid=r.rid, prompt=list(r.prompt), max_new=r.max_new)
+            for r in reqs]
+
+
+# two workload/engine shapes: SHARED exercises prefix multicast +
+# suffix prefill on a roomy pool; PRESSURE forces decode page faults,
+# prefix eviction and preemption on a pool too small for two requests
+SHARED = dict(max_batch=2, cache_len=64, page_size=8)
+PRESSURE = dict(max_batch=2, cache_len=64, page_size=4, num_pages=7,
+                watermark=1)
+
+_BASELINES: dict[tuple, dict] = {}
+
+
+def _workload(cfg, shape):
+    if shape is SHARED:
+        return _mk_requests(cfg, shared_prefix=32, n=4, max_new=5, seed=7)
+    return _mk_requests(cfg, n=3, max_new=10, seed=3)
+
+
+def _baseline(cfg, params, shape, chunk):
+    """Fault-free, guards-off token streams for a workload shape — the
+    oracle every degraded run must reproduce."""
+    key = (id(shape), chunk)
+    if key not in _BASELINES:
+        eng = PagedEngine(cfg, params, prefill_chunk=chunk, **shape)
+        done = eng.run(_clone(_workload(cfg, shape)))
+        eng.check()
+        _BASELINES[key] = {r.rid: r.out for r in done}
+    return _BASELINES[key]
+
+
+def _run_faulted(cfg, params, shape, chunk, plan, **engine_kw):
+    """Run the shape's workload under an armed plan; audit; return
+    (tokens, engine, plan)."""
+    eng = PagedEngine(cfg, params, prefill_chunk=chunk, **shape, **engine_kw)
+    with plan:
+        done = eng.run(_clone(_workload(cfg, shape)))
+    eng.check()
+    return {r.rid: r.out for r in done}, eng, plan
+
+
+# ---------------------------------------------------------------------------
+# the harness itself
+# ---------------------------------------------------------------------------
+
+
+def test_faultplan_validation_and_arming():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        Fault("pool.bogus")
+    with pytest.raises(ValueError, match="count"):
+        Fault("pool.alloc", at=-1)
+    with pytest.raises(ValueError, match="prob"):
+        Fault("pool.alloc", prob=1.5)
+    plan = FaultPlan([Fault("pool.alloc", at=1, count=2)])
+    with plan:
+        with pytest.raises(RuntimeError, match="already armed"):
+            FaultPlan().__enter__()
+        assert plan.fires("pool.alloc") is None  # hit 0
+        assert plan.fires("pool.alloc") is not None  # hits 1, 2 fire
+        assert plan.fires("pool.alloc") is not None
+        assert plan.fires("pool.alloc") is None  # hit 3
+    assert plan.fired == [("pool.alloc", 1), ("pool.alloc", 2)]
+    # seeded prob plans are reproducible
+    a = FaultPlan([Fault("pool.cow", prob=0.5)], seed=3)
+    b = FaultPlan([Fault("pool.cow", prob=0.5)], seed=3)
+    got = [(a.fires("pool.cow") is None, b.fires("pool.cow") is None)
+           for _ in range(32)]
+    assert all(x == y for x, y in got)
+    assert any(not x for x, _ in got)
+
+
+def test_typed_rejection_reasons():
+    pool = PagePool(10, 4)  # 9 usable pages
+    sched = Scheduler(pool, None, watermark=2)
+    assert sched.check_admission(7) is None
+    rej = sched.check_admission(8)
+    assert rej.reason == "watermark" and rej.retry_after_pages == 1
+    assert not rej  # falsy: `while queue and admit()` loops keep working
+    assert sched.check_admission(20).reason == "pool-dry"
+    assert isinstance(rej, Rejected)
+
+
+# ---------------------------------------------------------------------------
+# pool exhaustion at every allocation site
+# ---------------------------------------------------------------------------
+
+
+@CHUNKS
+@pytest.mark.parametrize("at", [0, 1, 2, 4])
+def test_pool_exhaustion_recovers_token_identical(small, chunk, at):
+    """A forced allocation failure at the ``at``-th pool draw — cold
+    fresh alloc, suffix/chunk draw, or decode page fault, depending on
+    ``at`` — unwinds to a typed rejection or a degraded requeue, then
+    the retry completes every request with the fault-free tokens."""
+    cfg, params = small
+    want = _baseline(cfg, params, SHARED, chunk)
+    got, eng, plan = _run_faulted(
+        cfg, params, SHARED, chunk,
+        FaultPlan([Fault("pool.alloc", at=at)]), kv_guard=True,
+    )
+    assert plan.fired == [("pool.alloc", at)]
+    assert got == want
+    assert not eng.failed
+
+
+@CHUNKS
+@pytest.mark.parametrize(
+    "spec",
+    [
+        [Fault("swap.drop", at=0)],
+        [Fault("sched.evict", at=0, count=2)],
+        [Fault("pool.alloc", at=5, count=2)],
+        [Fault("pool.alloc", prob=0.15), Fault("swap.drop", prob=0.25)],
+    ],
+    ids=["swap-drop", "evict-refused", "alloc-burst", "seeded-mix"],
+)
+def test_fault_matrix_under_memory_pressure(small, chunk, spec):
+    """The seeded matrix on the preemption-pressure shape: every plan
+    ends with all requests served token-identically and the pool audit
+    green."""
+    cfg, params = small
+    want = _baseline(cfg, params, PRESSURE, chunk)
+    got, eng, plan = _run_faulted(
+        cfg, params, PRESSURE, chunk, FaultPlan(spec, seed=11), kv_guard=True,
+    )
+    assert got == want
+    assert not eng.failed
+    if any(f.prob is None for f in plan.faults):
+        assert plan.fired  # the planned deterministic fault really fired
+
+
+def test_swap_blob_checksum_detects_corruption(small):
+    """kv_guard: a swap blob whose bytes rot on the host fails its
+    checksum at swap-in; the request replays from tokens instead of
+    scattering garbage back into the pool."""
+    cfg, params = small
+    reqs = _mk_requests(cfg, n=2, max_new=4)
+    want = {r.rid: r.out for r in
+            PagedEngine(cfg, params, **SHARED).run(_clone(reqs))}
+    eng = PagedEngine(cfg, params, kv_guard=True, **SHARED)
+    live = _clone(reqs)
+    assert eng._admit(live[0]) is True and eng._admit(live[1]) is True
+    eng._preempt(1)
+    data, *rest = live[1]._swap
+    leaves, treedef = jax.tree.flatten(data)
+    leaves[0] = np.array(leaves[0])
+    leaves[0].reshape(-1)[0] = 100  # rot one host value
+    live[1]._swap = (jax.tree.unflatten(treedef, leaves), *rest)
+    done = {r.rid: r.out for r in eng.run([])}
+    assert eng.n_swap_dropped == 1
+    assert done == want
+    assert not eng.failed
+    eng.check()
+
+
+# ---------------------------------------------------------------------------
+# corrupted multicast chains: detect at the sharing point, quarantine
+# ---------------------------------------------------------------------------
+
+
+@CHUNKS
+def test_corrupt_chain_quarantined_all_tokens_identical(small, chunk):
+    """The flagship: bytes flipped in the chain the first admission
+    cached are detected when the second request tries to *share* it.
+    The chain is quarantined (dropped from the tree), its running owner
+    is requeued for replay, and — because detection precedes the owner's
+    first decode over the bad page — every request still finishes with
+    the fault-free tokens."""
+    cfg, params = small
+    want = _baseline(cfg, params, SHARED, chunk)
+    got, eng, plan = _run_faulted(
+        cfg, params, SHARED, chunk,
+        FaultPlan([Fault("page.corrupt", at=0, page_index=0)]), kv_guard=True,
+    )
+    assert plan.fired == [("page.corrupt", 0)]
+    assert eng.n_quarantined_pages > 0
+    assert eng.n_degrade_requeues >= 1  # the chain's owner was replayed
+    assert got == want
+    assert not eng.failed
+
+
+def test_manual_corruption_detected_only_with_guard(small):
+    """Corruption of a cached (idle) chain between requests: the guarded
+    engine quarantines at the next match and serves the clean tokens;
+    the unguarded engine shares the chain blind (control)."""
+    cfg, params = small
+    reqs = _mk_requests(cfg, shared_prefix=32, n=2, max_new=4)
+    solo = {r.rid: r.out for r in
+            PagedEngine(cfg, params, **SHARED).run([_clone(reqs)[1]])}
+
+    for guard_on in (True, False):
+        eng = PagedEngine(cfg, params, kv_guard=guard_on, **SHARED)
+        eng.run([_clone(reqs)[0]])  # caches the prefix chain
+        first = next(iter(eng.prefix.root.children.values())).page_id
+        eng._corrupt_page(first)
+        done = {r.rid: r.out for r in eng.run([_clone(reqs)[1]])}
+        eng.check()
+        if guard_on:
+            assert eng.n_quarantined_pages > 0
+            # quarantine forces the cold path: clean bytes, clean tokens
+            assert done[1] == solo[1]
+        else:
+            assert eng.n_quarantined_pages == 0  # shared blind
+
+
+def test_degrade_requeue_cap_fails_typed(small):
+    """A request that keeps degrading is eventually failed with a typed
+    error — bounded requeues, not an admission/replay livelock."""
+    cfg, params = small
+    reqs = _mk_requests(cfg, shared_prefix=32, n=2, max_new=4)
+    eng = PagedEngine(cfg, params, kv_guard=True, **SHARED)
+    live = _clone(reqs)
+    assert eng._admit(live[0]) is True
+    live[0]._requeues = MAX_DEGRADE_REQUEUES  # at the cap already
+    eng._corrupt_page(next(iter(eng.prefix.root.children.values())).page_id)
+    assert eng._admit(live[1]) is True  # detects, quarantines, runs cold
+    assert len(eng.failed) == 1 and eng.failed[0] is live[0]
+    assert live[0].error and "quarantined" in live[0].error
+    assert not eng._requeue
+    done = eng.run([])
+    assert {r.rid for r in done} == {1}
+    eng.check()
+
+
+# ---------------------------------------------------------------------------
+# kernel raise / NaN: retry once on the reference backend
+# ---------------------------------------------------------------------------
+
+
+@CHUNKS
+def test_kernel_raise_falls_back_token_identical(small, chunk):
+    cfg, params = small
+    kernels.reset_fallback_stats()
+    want = _baseline(cfg, params, SHARED, chunk)
+    got, eng, _ = _run_faulted(
+        cfg, params, SHARED, chunk,
+        FaultPlan([Fault("kernel.raise", at=2)]), kernel_fallback=True,
+    )
+    # on this host the primary and reference backends resolve to the
+    # same math, so the retried step is bitwise — token-identical
+    assert got == want
+    assert eng.n_fallback == 1
+    st = kernels.fallback_stats()
+    assert st.fallbacks == 1 and st.raised == 1
+    assert "InjectedFault" in (st.last_error or "")
+
+
+def test_kernel_nan_output_guard_falls_back(small):
+    cfg, params = small
+    kernels.reset_fallback_stats()
+    want = _baseline(cfg, params, SHARED, None)
+    got, eng, _ = _run_faulted(
+        cfg, params, SHARED, None,
+        FaultPlan([Fault("kernel.nan", at=1)]), kernel_fallback=True,
+    )
+    assert got == want
+    assert eng.n_fallback == 1
+    assert kernels.fallback_stats().numeric_trips == 1
+
+
+def test_kernel_raise_without_fallback_propagates(small):
+    cfg, params = small
+    eng = PagedEngine(cfg, params, **SHARED)
+    with FaultPlan([Fault("kernel.raise", at=0)]):
+        with pytest.raises(InjectedFault, match="injected kernel fault"):
+            eng.run(_clone(_mk_requests(cfg, n=2, max_new=3)))
+
+
+# ---------------------------------------------------------------------------
+# rejection hygiene + guards-off equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_rejected_admission_restores_refcounts_exactly(small):
+    """Satellite guarantee: a watermark rejection after a prefix match
+    unwinds every reference it took (the kv_guard engine asserts this
+    internally; the test pins it independently)."""
+    cfg, params = small
+    reqs = _mk_requests(cfg, shared_prefix=32, n=2, max_new=5)
+    # 7 usable pages: req 0 takes 5, leaving 2 — req 1 (1 fresh page
+    # after matching 4 prefix pages) would breach watermark 2
+    eng = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8,
+                      num_pages=8, watermark=2, kv_guard=True)
+    live = _clone(reqs)
+    assert eng._admit(live[0]) is True
+    before = list(eng.pool._ref)
+    rej = eng._admit(live[1])
+    assert isinstance(rej, Rejected) and rej.reason == "watermark"
+    assert eng.pool._ref == before
+    assert eng.rejections["watermark"] == 1
+    eng.check()
+
+
+def test_no_free_slot_rejection(small):
+    cfg, params = small
+    eng = PagedEngine(cfg, params, max_batch=1, cache_len=64, page_size=16)
+    live = _clone(_mk_requests(cfg, n=2, max_new=3))
+    assert eng._admit(live[0]) is True
+    rej = eng._admit(live[1])
+    assert isinstance(rej, Rejected) and rej.reason == "no-free-slot"
+    assert rej.retry_after_pages == 0
+    eng.run([live[1]])  # drains both; slot frees, req 1 admits
+    eng.check()
+
+
+def test_guards_on_tokens_match_guards_off(small):
+    """kv_guard + kernel_fallback change costs, never tokens."""
+    cfg, params = small
+    want = _baseline(cfg, params, SHARED, None)
+    eng = PagedEngine(cfg, params, kv_guard=True, kernel_fallback=True,
+                      **SHARED)
+    got = {r.rid: r.out for r in eng.run(_clone(_workload(cfg, SHARED)))}
+    assert got == want
+    assert eng.n_fallback == 0 and eng.n_quarantined_pages == 0
+    stats = eng.stats()
+    assert stats["failed"] == 0 and stats["kernel_fallbacks"] == 0
+    eng.check()

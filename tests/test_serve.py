@@ -85,6 +85,7 @@ def test_paged_matches_dense_cold(small):
     eng = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=16)
     paged = {r.rid: r.out for r in eng.run(_clone(reqs))}
     assert paged == dense
+    eng.check()  # refcount/free-list audit: no page leaked by the run
 
 
 def test_paged_matches_dense_with_shared_prefix(small):
@@ -100,6 +101,7 @@ def test_paged_matches_dense_with_shared_prefix(small):
     # the other 3 requests
     assert st["prefix_hit_tokens"] == 3 * 32
     assert st["prefix_pages"] >= 4
+    eng.check()
 
 
 def test_prefix_pages_allocated_exactly_once(small):
@@ -119,6 +121,7 @@ def test_prefix_pages_allocated_exactly_once(small):
     ) - (n - 1) * (prefix_len // ps)
     assert eng.pool.stats.allocated == expected
     assert eng.pool.stats.shared >= (n - 1) * (prefix_len // ps)
+    eng.check()
 
 
 def test_preemption_restores_pages_bit_identically(small):
@@ -150,6 +153,7 @@ def test_preemption_restores_pages_bit_identically(small):
     )
     for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
         np.testing.assert_array_equal(a[:, :, :n_pages], b[:, :, :n_pages])
+    eng.check()
 
 
 def test_preemption_under_pressure_end_to_end(small):
@@ -163,6 +167,7 @@ def test_preemption_under_pressure_end_to_end(small):
     paged = {r.rid: r.out for r in eng.run(_clone(reqs))}
     assert eng.n_preempted > 0
     assert {rid: out for rid, out in paged.items()} == dense
+    eng.check()
 
 
 def test_fork_copy_on_write(small):
@@ -181,6 +186,7 @@ def test_fork_copy_on_write(small):
             done[r.rid] = r.out
     assert eng.n_cow >= 1  # divergence copied the shared tail page
     assert done[0] == done[1]  # identical state -> identical greedy tokens
+    eng.check()
 
 
 @pytest.mark.parametrize("chunk", [2, 3, 16])
@@ -202,18 +208,22 @@ def test_chunked_prefill_matches_dense_and_unchunked(small, chunk):
     # chunking must not change the page accounting either
     assert eng.pool.stats.allocated == un.pool.stats.allocated
     assert eng.stats()["prefix_hit_tokens"] == un.stats()["prefix_hit_tokens"]
+    un.check()
+    eng.check()
 
 
 def test_chunked_prefill_int8_matches_unchunked_int8(small):
     cfg, params = small
     reqs = _mk_requests(cfg, shared_prefix=32, n=4)
-    a = {r.rid: r.out for r in
-         PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8,
-                     kv_dtype="int8").run(_clone(reqs))}
-    b = {r.rid: r.out for r in
-         PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8,
-                     kv_dtype="int8", prefill_chunk=3).run(_clone(reqs))}
+    eng_a = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8,
+                        kv_dtype="int8")
+    a = {r.rid: r.out for r in eng_a.run(_clone(reqs))}
+    eng_b = PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=8,
+                        kv_dtype="int8", prefill_chunk=3)
+    b = {r.rid: r.out for r in eng_b.run(_clone(reqs))}
     assert a == b
+    eng_a.check()
+    eng_b.check()
 
 
 def test_preemption_mid_chunked_prefill_bit_identical(small):
@@ -249,6 +259,7 @@ def test_preemption_mid_chunked_prefill_bit_identical(small):
     )
     for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
         np.testing.assert_array_equal(a[:, :, :n_pages], b[:, :, :n_pages])
+    eng.check()
 
 
 def test_paged_engine_int8_pages_serve(small):
@@ -258,6 +269,7 @@ def test_paged_engine_int8_pages_serve(small):
                       kv_dtype="int8")
     done = eng.run(reqs)
     assert len(done) == 3 and all(len(r.out) == 4 for r in done)
+    eng.check()
 
 
 def test_paged_cache_rejects_unsupported_archs():
