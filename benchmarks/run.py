@@ -21,6 +21,9 @@ Benches:
   kernel_serve_* / kernel_paged_*  paged-KV serving rows: decode
                tokens/s, prefix-cache prefill latency, chunked-prefill
                supertile kernel vs reference gather (bench_serve.py)
+  kernel_serve_load_*  async serve-loop load rows: sustained tok/s +
+               TTFT/ITL percentiles under a seeded Poisson trace
+               (bench_serve_load.py)
 """
 from __future__ import annotations
 
@@ -39,6 +42,7 @@ SOURCES = (
     ("benchmarks.bench_collective_bytes", ("fig3b_tpu_",), False, True),
     ("benchmarks.bench_kernels", ("kernel_",), True, False),
     ("benchmarks.bench_serve", ("kernel_serve_", "kernel_paged_"), True, False),
+    ("benchmarks.bench_serve_load", ("kernel_serve_load_",), True, False),
 )
 
 

@@ -16,12 +16,31 @@ bucket, not one per prompt length; padded positions are masked out of
 the cache) and produce identical token streams — CI runs the smoke
 workload under both and diffs the output.
 
+``--server`` switches from the fixed request list to the **async
+continuous-batching server loop** (`repro.serve.server.ServeLoop`,
+paged engine only): a seeded Poisson trace (``--qps``, ``--duration``,
+``--seed``, shared-prefix mix via ``--shared-prefix``/``--shared-frac``)
+arrives in real time, prefills land between decode ticks, and every
+request streams its tokens through the emit queue.  ``--server-driver
+sync`` replays the *same* seeded trace through the synchronous
+turn-by-turn ``PagedEngine.run`` — the correctness oracle: both drivers
+print identical per-request token lines, which CI diffs
+(``serve-load-smoke``).  The loop driver validates its flat metrics
+snapshot against the schema, asserts every request DRAINED, and writes
+the snapshot to ``--metrics-json`` when given.  ``--seed`` threads one
+seed through parameter init, the load generator, and any ``--chaos``
+fault plan, so a server run — chaos legs included — is exactly
+reproducible from its command line.
+
 CPU demo: PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
     --reduced --requests 6 --max-new 16 [--kv paged]
+Server:  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+    --reduced --server --qps 6 --duration 1.0 --max-slots 3 --shared-prefix 24
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 import jax
@@ -31,7 +50,18 @@ import numpy as np
 from repro import kernels
 from repro.configs import ARCHS, get_config
 from repro.models import lm
-from repro.serve import PagedEngine, Request, pad_to_bucket  # noqa: F401 (Request re-export)
+from repro.serve import (  # noqa: F401 (Request re-export)
+    Fault,
+    FaultPlan,
+    Lifecycle,
+    LoadGen,
+    PagedEngine,
+    Request,
+    ServeLoop,
+    ServeMetrics,
+    pad_to_bucket,
+    validate_snapshot,
+)
 
 
 class Server:
@@ -124,6 +154,26 @@ class Server:
         return done
 
 
+def _parse_chaos(specs: list[str]) -> list[Fault]:
+    """``SITE[:PROB]`` CLI specs -> :class:`Fault` entries (``PROB``
+    defaults to probabilistic firing at 0.05; deterministic ``at=``
+    plans stay a test-suite tool)."""
+    out = []
+    for spec in specs:
+        site, _, prob = spec.partition(":")
+        out.append(Fault(site, prob=float(prob) if prob else 0.05))
+    return out
+
+
+def _print_request_lines(done: list[Request]) -> None:
+    # stdout is the parity surface: the async loop and the synchronous
+    # oracle must print byte-identical lines (CI diffs them)
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {len(r.out)} "
+              f"tokens: {r.out[:8]}...")
+    print(f"served {len(done)} requests with continuous batching")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, default="qwen1.5-0.5b")
@@ -131,9 +181,39 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--kv", choices=("dense", "paged"), default="dense",
+    ap.add_argument("--seed", type=int, default=0,
+                    help="one seed for everything random in a run: model "
+                         "params, the request/load generator, and any "
+                         "--chaos fault plan — a server run (chaos legs "
+                         "included) is exactly reproducible from its CLI")
+    ap.add_argument("--server", action="store_true",
+                    help="async continuous-batching server loop (ServeLoop) "
+                         "over a seeded Poisson trace; requires --kv paged")
+    ap.add_argument("--qps", type=float, default=4.0,
+                    help="--server: mean Poisson arrival rate")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="--server: trace length in seconds")
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="--server: concurrent decode slots (default: "
+                         "--max-batch)")
+    ap.add_argument("--shared-frac", type=float, default=0.5,
+                    help="--server: fraction of requests opening with the "
+                         "--shared-prefix tokens (multicast fan-out mix)")
+    ap.add_argument("--server-driver", choices=("loop", "sync"), default="loop",
+                    help="--server: 'loop' runs the async ServeLoop; 'sync' "
+                         "replays the identical trace through the turn-by-"
+                         "turn PagedEngine.run — the token-parity oracle")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="--server loop: write the validated flat metrics "
+                         "snapshot here")
+    ap.add_argument("--chaos", action="append", default=[], metavar="SITE[:PROB]",
+                    help="arm a seeded FaultPlan with this site firing at "
+                         "PROB (repeatable; e.g. --chaos swap.drop:0.2); "
+                         "reproducible via --seed")
+    ap.add_argument("--kv", choices=("dense", "paged"), default=None,
                     help="KV-cache backend: dense ring buffers, or the "
-                         "paged pool with prefix sharing (repro.serve)")
+                         "paged pool with prefix sharing (repro.serve); "
+                         "default dense, or paged under --server")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--pages", type=int, default=None,
                     help="page-pool size (default: dense-equivalent footprint)")
@@ -161,20 +241,35 @@ def main() -> None:
                          "buffer donation to keep retry inputs alive)")
     args = ap.parse_args()
 
+    if args.kv is None:
+        args.kv = "paged" if args.server else "dense"
+    if args.server and args.kv != "paged":
+        ap.error("--server requires --kv paged (the ServeLoop is built on "
+                 "the paged engine's typed admission/slot machinery)")
     if args.kernel_policy:
         kernels.set_policy(args.kernel_policy)
     cfg = get_config(args.arch, reduced=args.reduced)
-    params = lm.init(cfg, jax.random.PRNGKey(0))
+    params = lm.init(cfg, jax.random.PRNGKey(args.seed))
+    max_batch = (args.max_slots or args.max_batch) if args.server \
+        else args.max_batch
     if args.kv == "paged":
         server = PagedEngine(
-            cfg, params, max_batch=args.max_batch, page_size=args.page_size,
+            cfg, params, max_batch=max_batch, page_size=args.page_size,
             num_pages=args.pages, kv_dtype=args.kv_dtype,
             prefill_chunk=args.prefill_chunk,
             kv_guard=args.kv_guard, kernel_fallback=args.kernel_fallback,
         )
     else:
-        server = Server(cfg, params, max_batch=args.max_batch)
-    rng = np.random.default_rng(0)
+        server = Server(cfg, params, max_batch=max_batch)
+
+    plan = FaultPlan(_parse_chaos(args.chaos), seed=args.seed) \
+        if args.chaos else None
+
+    if args.server:
+        _run_server(args, cfg, server, plan)
+        return
+
+    rng = np.random.default_rng(args.seed)
     prefix = list(rng.integers(0, cfg.vocab, size=args.shared_prefix))
     reqs = [
         Request(rid=i,
@@ -184,14 +279,68 @@ def main() -> None:
                 max_new=args.max_new)
         for i in range(args.requests)
     ]
-    done = server.run(reqs)
+    if plan is not None:
+        with plan:
+            done = server.run(reqs)
+    else:
+        done = server.run(reqs)
     # stdout is the parity surface: CI diffs dense vs. paged output, so
     # only mode-independent lines go here (mode details -> stderr)
-    for r in sorted(done, key=lambda r: r.rid):
-        print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {len(r.out)} tokens: {r.out[:8]}...")
-    print(f"served {len(done)} requests with continuous batching")
+    _print_request_lines(done)
     if args.kv == "paged":
         print(f"# paged kv stats: {server.stats()}", file=sys.stderr)
+
+
+def _run_server(args, cfg, engine: PagedEngine, plan: FaultPlan | None) -> None:
+    """``--server``: one seeded trace, two drivers.  ``loop`` is the
+    async ServeLoop (metrics snapshot validated + optionally written);
+    ``sync`` is the turn-by-turn oracle.  Identical stdout by design."""
+    gen = LoadGen(
+        seed=args.seed, qps=args.qps, duration=args.duration,
+        vocab=cfg.vocab, max_new=args.max_new,
+        shared_prefix_len=args.shared_prefix, shared_frac=args.shared_frac,
+    )
+    trace = gen.trace()
+    print(f"# trace: {len(trace)} requests over {args.duration}s @ qps "
+          f"{args.qps} (seed {args.seed}, driver {args.server_driver})",
+          file=sys.stderr)
+
+    if args.server_driver == "sync":
+        reqs = [Request(rid=a.rid, prompt=list(a.prompt), max_new=a.max_new)
+                for a in trace]
+        if plan is not None:
+            with plan:
+                done = engine.run(reqs)
+        else:
+            done = engine.run(reqs)
+        _print_request_lines(done)
+        print(f"# paged kv stats: {engine.stats()}", file=sys.stderr)
+        return
+
+    loop = ServeLoop(engine, metrics=ServeMetrics(), max_slots=args.max_slots)
+    if plan is not None:
+        with plan:
+            results = loop.run_trace(trace)
+    else:
+        results = loop.run_trace(trace)
+    snap = validate_snapshot(loop.snapshot())
+    drained = [r.engine_req for r in results.values()
+               if r.state is Lifecycle.DRAINED]
+    _print_request_lines(drained)
+    print(f"# serve metrics: {json.dumps(snap, sort_keys=True)}",
+          file=sys.stderr)
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.metrics_json}", file=sys.stderr)
+    if plan is None:
+        # without injected faults every request must drain; a chaos run
+        # may legitimately end with typed failures (reported above)
+        bad = {r.rid: r.state.name for r in results.values()
+               if r.state is not Lifecycle.DRAINED}
+        if bad:
+            raise SystemExit(f"requests did not drain: {bad}")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,13 @@
                 ``Rejected`` verdicts),
 ``engine``    — the paged continuous-batching engine tying them to the
                 model layer and the ``paged_attention`` kernel op,
+``server``    — the async continuous-batching serve loop: streaming
+                request lifecycle, background prefill/decode/emit
+                workers, typed admission backpressure, clean drain,
+``metrics``   — streaming latency histograms + the flat, schema-checked
+                metrics snapshot,
+``loadgen``   — seeded Poisson arrival traces (the reproducible load
+                benchmark workload),
 ``faults``    — deterministic fault-injection plans for chaos testing,
 ``guard``     — pool invariant auditor + per-page content fingerprints.
 """
@@ -24,6 +31,19 @@ from repro.serve.guard import (  # noqa: F401
     blob_checksum,
     check_pool,
 )
+from repro.serve.loadgen import Arrival, LoadGen  # noqa: F401
+from repro.serve.metrics import (  # noqa: F401
+    SNAPSHOT_SCHEMA,
+    ServeMetrics,
+    StreamingHistogram,
+    validate_snapshot,
+)
 from repro.serve.pagepool import NULL_PAGE, PagePool, PoolStats  # noqa: F401
 from repro.serve.prefix import PrefixCache  # noqa: F401
 from repro.serve.scheduler import Rejected, Scheduler  # noqa: F401
+from repro.serve.server import (  # noqa: F401
+    Lifecycle,
+    ServedRequest,
+    ServeLoop,
+    TokenStream,
+)

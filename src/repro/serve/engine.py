@@ -706,3 +706,38 @@ class PagedEngine:
             "degrade_requeues": self.n_degrade_requeues,
             "failed": len(self.failed),
         }
+
+    # stats() keys that are point-in-time gauges, not cumulative counters:
+    # stats_delta reports their current value rather than a difference
+    _STAT_GAUGES = frozenset({"free_pages", "prefix_pages", "peak_in_use"})
+
+    def flat_stats(self) -> dict:
+        """:meth:`stats` with the nesting removed: ``pool`` counters as
+        ``pool_*`` keys, per-reason rejections as ``rejected_<reason>``
+        — the shape :mod:`repro.serve.metrics` merges into its flat
+        snapshot."""
+        flat: dict = {}
+        for key, val in self.stats().items():
+            if key == "pool":
+                flat.update({f"pool_{k}": v for k, v in val.items()})
+            elif key == "rejected":
+                flat.update({f"rejected_{k}": v for k, v in val.items()})
+            else:
+                flat[key] = val
+        return flat
+
+    def stats_delta(self) -> dict:
+        """Flat dict of counter *deltas* since the previous
+        ``stats_delta`` call (first call: since engine construction), so
+        per-window consumers — the metrics snapshot, a bench row's
+        per-trace accounting — never re-diff nested cumulative stats by
+        hand.  Gauges (``free_pages``, ``prefix_pages``,
+        ``pool_peak_in_use``) report their current value."""
+        flat = self.flat_stats()
+        prev = getattr(self, "_stats_prev", {})
+        self._stats_prev = flat
+        return {
+            k: v if k.removeprefix("pool_") in self._STAT_GAUGES
+            else v - prev.get(k, 0)
+            for k, v in flat.items()
+        }
