@@ -12,12 +12,13 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
-from repro.dist.mcast import make_broadcast_fn
+from repro.dist.mcast import bytes_model, make_broadcast_fn
 from repro.launch.hlo import analyze_compiled
 from benchmarks.analysis import LINK_BW
 
 mesh = jax.make_mesh((8,), ("data",))
 x = jnp.zeros((2048, 1024), jnp.bfloat16)  # 4 MiB payload
+predicted = bytes_model(x.nbytes, 8, per_device=True)
 out = {}
 for mode in ("unicast", "sw_tree", "hw"):
     f = make_broadcast_fn(mesh, x.shape, x.dtype, mode)
@@ -26,6 +27,7 @@ for mode in ("unicast", "sw_tree", "hw"):
     a = analyze_compiled(c, 8)
     out[mode] = {
         "collective_bytes_per_dev": a["collective_bytes"],
+        "predicted_bytes_per_dev": predicted[mode],
         "counts": a["collective_counts"],
         "est_time_us": a["collective_bytes"] / LINK_BW * 1e6,
     }
@@ -47,9 +49,11 @@ def run() -> list[str]:
             uni = data["unicast"]["collective_bytes_per_dev"]
             for mode, d in data.items():
                 ratio = uni / d["collective_bytes_per_dev"] if d["collective_bytes_per_dev"] else float("inf")
+                obs, pred = d["collective_bytes_per_dev"], d["predicted_bytes_per_dev"]
                 rows.append(
                     f"fig3b_tpu_{mode},{d['est_time_us']:.1f},"
-                    f"bytes/dev={d['collective_bytes_per_dev']/1e6:.1f}MB "
+                    f"bytes/dev={obs/1e6:.1f}MB "
+                    f"model={pred/1e6:.1f}MB ({obs/pred:.2f}x pred) "
                     f"ops={d['counts']} speedup_vs_unicast={ratio:.1f}x"
                 )
             return rows

@@ -25,6 +25,10 @@ interpret-mode timings for the forced-pallas kernel rows):
   The derived column records the hit/cold speedup and asserts the
   multicast invariant — the shared prefix's pages were allocated
   exactly once for the whole batch.
+* ``kernel_serve_mcast_bytes``    — 4-shard pool, shared-prefix round:
+  one local prefill + three page-chain broadcasts (sw_tree timed); the
+  derived column reports analytic fabric bytes per mcast mode and
+  asserts the paper's per-device hierarchy hw < sw_tree < unicast.
 * ``kernel_paged_prefill_pallas`` — the chunked-prefill supertile kernel
   (forced pallas, interpret mode) on a multi-token suffix problem: one
   K/V page fetch multicast across the q chunk.
@@ -194,6 +198,61 @@ def run(only: str | None = None) -> list[str]:
             f"shared {PREFIX_LEN}-token prefix multicast: {SUFFIX_LEN}-token "
             f"suffix only, {speedup:.1f}x faster than cold; prefix pages "
             f"allocated once for 8 requests"
+        )
+
+    # -- sharded pool: page-chain broadcast latency + fabric bytes ----------
+    if want("kernel_serve_mcast_bytes"):
+        from repro.dist import mcast
+        from repro.serve import ServeConfig
+
+        n_shards = 4
+        prefix_pages = PREFIX_LEN // PAGE_SIZE
+
+        def broadcast_round(eng):
+            """Admit 4 shared-prefix requests (router spreads them over
+            the 4 shards: one local prefill/hit + 3 page-chain
+            broadcasts), then retire them and evict the non-primary
+            copies so the next round broadcasts again."""
+            t0 = time.perf_counter()
+            for i in range(n_shards):
+                req = Request(
+                    rid=i,
+                    prompt=prefix + list(rng.integers(0, cfg.vocab,
+                                                      size=SUFFIX_LEN)),
+                    max_new=400,
+                )
+                assert eng._admit(req)
+            dt = time.perf_counter() - t0
+            for slot in list(eng.slots):
+                eng.pool.release(eng.slots.pop(slot).pages)
+            for s in range(1, n_shards):
+                eng.prefix.evict(prefix_pages, shard=s)
+            return dt
+
+        fabric = {}
+        best = float("inf")
+        for mode in mcast.MODES:
+            eng = PagedEngine(cfg, params, config=ServeConfig(
+                max_slots=n_shards, cache_len=1024, page_size=PAGE_SIZE,
+                num_shards=n_shards, pages_per_shard=96, mcast_mode=mode,
+            ))
+            broadcast_round(eng)  # compile prefill + broadcast programs
+            st = eng.stats()
+            assert st["broadcast_chains"] == n_shards - 1, st
+            assert st["broadcast_pages"] == (n_shards - 1) * prefix_pages, st
+            fabric[mode] = st["broadcast_fabric_bytes"]
+            if mode == "sw_tree":  # the timed production-ish mode
+                for _ in range(REPS):
+                    best = min(best, broadcast_round(eng))
+        # the paper's hierarchy, per-device: one hw fabric transaction
+        # beats log2(n) tree hops beats n-1 unicast replications
+        assert fabric["hw"] < fabric["sw_tree"] < fabric["unicast"], fabric
+        rows["kernel_serve_mcast_bytes"] = (
+            f"kernel_serve_mcast_bytes,{best * 1e6:.1f},"
+            f"4-shard shared-prefix round: {prefix_pages}-page chain x3 "
+            f"broadcasts (sw_tree); fabric MB uni/tree/hw "
+            f"{fabric['unicast'] / 1e6:.1f}/{fabric['sw_tree'] / 1e6:.1f}"
+            f"/{fabric['hw'] / 1e6:.1f}"
         )
 
     # -- chunked-prefill supertile kernel vs. reference gather ---------------

@@ -121,8 +121,33 @@ def mcast_matmul(x, w, mesh, *, mode: str = "hw"):
     return f(x, w)
 
 
-def bytes_model(payload_bytes: int, n: int) -> dict[str, float]:
-    """Analytic fabric-byte counts per mode (mirrors core.noc)."""
+def bytes_model(payload_bytes: int, n: int, *,
+                per_device: bool = False) -> dict[str, float]:
+    """Analytic fabric-byte counts per mode (mirrors core.noc).
+
+    The default is the *link-total* model: bytes crossing any fabric
+    link, summed.  For power-of-two ``n`` unicast and sw_tree tie there
+    (``sum(2**k, k<log2 n) == n-1`` — the tree moves the same bytes,
+    just not serialised through the source's port), so the hierarchy a
+    serving deployment feels is the **per-device** one:
+
+    ``per_device=True`` returns the collective bytes each participant
+    *sends* — ``(n-1)·P`` / ``ceil(log2 n)·P`` / ``P`` — the multiplier
+    the serving engine's ``broadcast_fabric_bytes`` counter uses.
+    ``launch.hlo.analyze_compiled`` counts every transfer at both
+    endpoints, so its ``collective_bytes`` lands at exactly 2x this
+    model in every mode (bench_collective_bytes.py reports predicted
+    vs. observed; the mode *hierarchy* is identical).  With one device
+    there is no fabric: every mode is 0.
+    """
+    if per_device:
+        if n <= 1:
+            return {m: 0.0 for m in MODES}
+        return {
+            "unicast": float(payload_bytes * (n - 1)),
+            "sw_tree": float(payload_bytes * math.ceil(math.log2(n))),
+            "hw": float(payload_bytes),
+        }
     return {
         "unicast": float(payload_bytes * (n - 1)),
         "sw_tree": float(payload_bytes * sum(2**k for k in range(int(math.log2(n))))),

@@ -28,3 +28,11 @@ def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int | None = None):
             axis_types=(AxisType.Auto,) * 3,
         )
     return make_mesh((data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+
+
+def make_serve_mesh(num_shards: int = 4, *, axis: str = "data"):
+    """1-D mesh the sharded serving engine partitions its page pool
+    over: ``num_shards`` devices along one named axis.  Requires at
+    least ``num_shards`` (fake or real) devices — CI forces them with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``."""
+    return make_mesh((num_shards,), (axis,), axis_types=(AxisType.Auto,))

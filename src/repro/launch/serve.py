@@ -32,6 +32,13 @@ seed through parameter init, the load generator, and any ``--chaos``
 fault plan, so a server run — chaos legs included — is exactly
 reproducible from its command line.
 
+Every paged-serving knob is one :class:`repro.serve.ServeConfig` field;
+the CLI flags are derived from the dataclass (``add_serve_args``), so
+``--num-shards 4 --mcast-mode sw_tree [--mesh]`` turns on the
+mesh-sharded page pool with multicast page-chain broadcast (``--mesh``
+additionally shards the device page arrays over a 1-D mesh — CI forces
+4 CPU devices with ``XLA_FLAGS=--xla_force_host_platform_device_count``).
+
 CPU demo: PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
     --reduced --requests 6 --max-new 16 [--kv paged]
 Server:  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
@@ -57,11 +64,14 @@ from repro.serve import (  # noqa: F401 (Request re-export)
     LoadGen,
     PagedEngine,
     Request,
+    ServeConfig,
     ServeLoop,
     ServeMetrics,
+    add_serve_args,
     pad_to_bucket,
     validate_snapshot,
 )
+from repro.serve import config as serve_config
 
 
 class Server:
@@ -154,17 +164,6 @@ class Server:
         return done
 
 
-def _parse_chaos(specs: list[str]) -> list[Fault]:
-    """``SITE[:PROB]`` CLI specs -> :class:`Fault` entries (``PROB``
-    defaults to probabilistic firing at 0.05; deterministic ``at=``
-    plans stay a test-suite tool)."""
-    out = []
-    for spec in specs:
-        site, _, prob = spec.partition(":")
-        out.append(Fault(site, prob=float(prob) if prob else 0.05))
-    return out
-
-
 def _print_request_lines(done: list[Request]) -> None:
     # stdout is the parity surface: the async loop and the synchronous
     # oracle must print byte-identical lines (CI diffs them)
@@ -181,11 +180,6 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--seed", type=int, default=0,
-                    help="one seed for everything random in a run: model "
-                         "params, the request/load generator, and any "
-                         "--chaos fault plan — a server run (chaos legs "
-                         "included) is exactly reproducible from its CLI")
     ap.add_argument("--server", action="store_true",
                     help="async continuous-batching server loop (ServeLoop) "
                          "over a seeded Poisson trace; requires --kv paged")
@@ -193,9 +187,6 @@ def main() -> None:
                     help="--server: mean Poisson arrival rate")
     ap.add_argument("--duration", type=float, default=2.0,
                     help="--server: trace length in seconds")
-    ap.add_argument("--max-slots", type=int, default=None,
-                    help="--server: concurrent decode slots (default: "
-                         "--max-batch)")
     ap.add_argument("--shared-frac", type=float, default=0.5,
                     help="--server: fraction of requests opening with the "
                          "--shared-prefix tokens (multicast fan-out mix)")
@@ -206,23 +197,10 @@ def main() -> None:
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="--server loop: write the validated flat metrics "
                          "snapshot here")
-    ap.add_argument("--chaos", action="append", default=[], metavar="SITE[:PROB]",
-                    help="arm a seeded FaultPlan with this site firing at "
-                         "PROB (repeatable; e.g. --chaos swap.drop:0.2); "
-                         "reproducible via --seed")
     ap.add_argument("--kv", choices=("dense", "paged"), default=None,
                     help="KV-cache backend: dense ring buffers, or the "
                          "paged pool with prefix sharing (repro.serve); "
                          "default dense, or paged under --server")
-    ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--pages", type=int, default=None,
-                    help="page-pool size (default: dense-equivalent footprint)")
-    ap.add_argument("--kv-dtype", choices=("bf16", "int8"), default="bf16",
-                    help="paged page storage dtype (int8 = quantised pages)")
-    ap.add_argument("--prefill-chunk", type=int, default=None,
-                    help="paged chunked prefill: split divergent suffixes "
-                         "into fixed-size chunks (pages charged per chunk); "
-                         "default: one bucket-padded call")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common random prefix of this many tokens "
                          "to every request (exercises the paged engine's "
@@ -231,14 +209,15 @@ def main() -> None:
     ap.add_argument("--kernel-policy", default=None,
                     help='kernel dispatch policy, e.g. "tiled" or '
                          '"backend=reference" (see repro.kernels.api)')
-    ap.add_argument("--kv-guard", action="store_true",
-                    help="paged: fingerprint cached page chains and verify "
-                         "them at every sharing point / swap-in (corrupted "
-                         "chains are quarantined, not multicast)")
-    ap.add_argument("--kernel-fallback", action="store_true",
-                    help="paged: retry a raising or non-finite kernel step "
-                         "once on the reference backend (disables cache-"
-                         "buffer donation to keep retry inputs alive)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="paged: shard the device page arrays over a "
+                         "--num-shards 1-D mesh (requires that many jax "
+                         "devices; pairs with --num-shards/--mcast-mode)")
+    # every ServeConfig knob becomes a flag, one definition (serve/config.py):
+    # --max-slots --cache-len --page-size --pages --kv-dtype --prompt-bucket
+    # --prefill-chunk --watermark --queue-cap --kv-guard --kernel-fallback
+    # --chaos --seed --num-shards --mesh-axis --mcast-mode --pages-per-shard
+    add_serve_args(ap)
     args = ap.parse_args()
 
     if args.kv is None:
@@ -248,28 +227,31 @@ def main() -> None:
                  "the paged engine's typed admission/slot machinery)")
     if args.kernel_policy:
         kernels.set_policy(args.kernel_policy)
+    serve_cfg = serve_config.from_args(
+        args,
+        max_slots=(args.max_slots or args.max_batch) if args.server
+        else args.max_batch,
+    )
     cfg = get_config(args.arch, reduced=args.reduced)
-    params = lm.init(cfg, jax.random.PRNGKey(args.seed))
-    max_batch = (args.max_slots or args.max_batch) if args.server \
-        else args.max_batch
+    params = lm.init(cfg, jax.random.PRNGKey(serve_cfg.seed))
     if args.kv == "paged":
-        server = PagedEngine(
-            cfg, params, max_batch=max_batch, page_size=args.page_size,
-            num_pages=args.pages, kv_dtype=args.kv_dtype,
-            prefill_chunk=args.prefill_chunk,
-            kv_guard=args.kv_guard, kernel_fallback=args.kernel_fallback,
-        )
-    else:
-        server = Server(cfg, params, max_batch=max_batch)
+        mesh = None
+        if args.mesh:
+            from repro.launch.mesh import make_serve_mesh
 
-    plan = FaultPlan(_parse_chaos(args.chaos), seed=args.seed) \
-        if args.chaos else None
+            mesh = make_serve_mesh(serve_cfg.num_shards,
+                                   axis=serve_cfg.mesh_axis)
+        server = PagedEngine(cfg, params, config=serve_cfg, mesh=mesh)
+    else:
+        server = Server(cfg, params, max_batch=serve_cfg.max_slots)
+
+    plan = serve_cfg.fault_plan()
 
     if args.server:
-        _run_server(args, cfg, server, plan)
+        _run_server(args, cfg, serve_cfg, server, plan)
         return
 
-    rng = np.random.default_rng(args.seed)
+    rng = np.random.default_rng(serve_cfg.seed)
     prefix = list(rng.integers(0, cfg.vocab, size=args.shared_prefix))
     reqs = [
         Request(rid=i,
@@ -291,18 +273,19 @@ def main() -> None:
         print(f"# paged kv stats: {server.stats()}", file=sys.stderr)
 
 
-def _run_server(args, cfg, engine: PagedEngine, plan: FaultPlan | None) -> None:
+def _run_server(args, cfg, serve_cfg: ServeConfig, engine: PagedEngine,
+                plan: FaultPlan | None) -> None:
     """``--server``: one seeded trace, two drivers.  ``loop`` is the
     async ServeLoop (metrics snapshot validated + optionally written);
     ``sync`` is the turn-by-turn oracle.  Identical stdout by design."""
     gen = LoadGen(
-        seed=args.seed, qps=args.qps, duration=args.duration,
+        seed=serve_cfg.seed, qps=args.qps, duration=args.duration,
         vocab=cfg.vocab, max_new=args.max_new,
         shared_prefix_len=args.shared_prefix, shared_frac=args.shared_frac,
     )
     trace = gen.trace()
     print(f"# trace: {len(trace)} requests over {args.duration}s @ qps "
-          f"{args.qps} (seed {args.seed}, driver {args.server_driver})",
+          f"{args.qps} (seed {serve_cfg.seed}, driver {args.server_driver})",
           file=sys.stderr)
 
     if args.server_driver == "sync":
@@ -317,7 +300,7 @@ def _run_server(args, cfg, engine: PagedEngine, plan: FaultPlan | None) -> None:
         print(f"# paged kv stats: {engine.stats()}", file=sys.stderr)
         return
 
-    loop = ServeLoop(engine, metrics=ServeMetrics(), max_slots=args.max_slots)
+    loop = ServeLoop(engine, config=serve_cfg, metrics=ServeMetrics())
     if plan is not None:
         with plan:
             results = loop.run_trace(trace)

@@ -1,6 +1,10 @@
 """Paged-KV serving subsystem: prefix-multicast KV sharing.
 
-``pagepool``  — refcounted page allocator (free list, COW, stats),
+``config``    — the one typed :class:`ServeConfig` every serving layer
+                is constructed from (validated dataclass; argparse flags
+                and the legacy-kwarg shim both derive from it),
+``pagepool``  — refcounted page allocator (free list, COW, stats;
+                mesh-sharded per-shard free lists),
 ``prefix``    — radix-tree prefix cache mapping token prefixes to shared
                 page chains (LRU eviction),
 ``scheduler`` — admission / reclamation / preemption policy (typed
@@ -17,6 +21,13 @@
 ``faults``    — deterministic fault-injection plans for chaos testing,
 ``guard``     — pool invariant auditor + per-page content fingerprints.
 """
+from repro.serve.config import (  # noqa: F401
+    MCAST_MODES,
+    ServeConfig,
+    add_serve_args,
+    config_from_legacy,
+    parse_chaos,
+)
 from repro.serve.engine import (  # noqa: F401
     MAX_DEGRADE_REQUEUES,
     PagedEngine,

@@ -60,6 +60,26 @@ prefix — so the engine degrades instead of crashing:
 All detectors are off-by-default flags; with both flags off and no
 armed :class:`~repro.serve.faults.FaultPlan`, every code path is the
 pre-existing one (CI diffs the token streams).
+
+Mesh sharding (PR 8): with ``ServeConfig(num_shards=S)`` the pool is
+partitioned into per-shard free lists (``pagepool.py``) and every
+admission is routed to one shard — pinned via ``Request.shard`` or
+balanced to the shard with the most free pages — where all its fresh
+pages, COW copies, and watermark accounting live.  A prefix hit is
+matched against that shard's **local** page copies; when the cached
+chain continues on other shards, the engine allocates local pages and
+**broadcasts** the chain's device bytes across the mesh (one
+``_bcast_pages`` launch per chain — the paper's crossbar multicast at
+pod scale), then registers the copies so every later consumer on the
+shard hits locally.  ``broadcast_*`` counters account the payload and
+the per-device fabric bytes under the configured ``mcast_mode``
+(``dist.mcast.bytes_model(per_device=True)`` — the unicast / sw_tree /
+hw hierarchy the HLO-level collectives in ``dist/mcast.py`` realise).
+Passing ``mesh=`` shards the device page arrays over
+``config.mesh_axis`` along the page axis (GSPMD inserts the actual
+cross-device collectives); without a mesh the same sharded bookkeeping
+runs on one device, which is what tier-1 tests.  ``num_shards=1`` is
+the bitwise-identical PR 4-7 engine.
 """
 from __future__ import annotations
 
@@ -71,11 +91,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import NamedSharding, PartitionSpec
+
 from repro import kernels
+from repro.dist import mcast
 from repro.models import lm
 from repro.nn import kvquant
 from repro.nn.attention import PagedKvCache
 from repro.serve import faults, guard
+from repro.serve.config import ServeConfig, config_from_legacy
 from repro.serve.pagepool import PagePool
 from repro.serve.prefix import PrefixCache
 from repro.serve.scheduler import Rejected, Scheduler
@@ -99,6 +123,9 @@ class Request:
     prompt: list[int]
     max_new: int
     out: list[int] = dataclasses.field(default_factory=list)
+    # pinned pool shard (host-side routing); None = balance to the shard
+    # with the most free pages at admission
+    shard: int | None = None
     # set when the engine permanently fails the request (typed reason);
     # failed requests are collected in PagedEngine.failed, never in run()'s
     # completed list
@@ -131,6 +158,7 @@ class _Slot:
     length: int  # valid tokens (prompt + generated context so far)
     last_tok: int
     admit_seq: int
+    shard: int = 0  # pool shard this slot allocates from
 
 
 def _is_paged_leaf(x):
@@ -148,49 +176,91 @@ class PagedEngine:
     fallback; requires an all-attention, global-window architecture
     (``lm.init_paged_cache`` enforces this)."""
 
-    def __init__(self, cfg, params, *, max_batch: int = 4, cache_len: int = 256,
-                 page_size: int = 16, num_pages: int | None = None,
-                 kv_dtype: str = "bf16", watermark: int = 2,
-                 prompt_bucket: int = 16, prefill_chunk: int | None = None,
-                 kv_guard: bool = False, kernel_fallback: bool = False):
-        if cache_len % page_size:
-            raise ValueError("cache_len must be a multiple of page_size")
-        if prefill_chunk is not None and prefill_chunk < 1:
-            raise ValueError("prefill_chunk must be >= 1")
+    def __init__(self, cfg, params, *, config: ServeConfig | None = None,
+                 mesh=None, **legacy):
+        if config is not None and legacy:
+            raise TypeError(
+                f"pass either config=ServeConfig(...) or legacy keywords, "
+                f"not both: {sorted(legacy)}")
+        if config is None:
+            config = config_from_legacy(legacy)
+        self.config = config
         self.cfg = cfg
         self.params = params
-        self.max_batch = max_batch
-        self.page_size = page_size
-        self.table_width = cache_len // page_size
-        self.cache_len = cache_len
-        self.prompt_bucket = prompt_bucket
+        self.max_batch = config.max_slots
+        self.page_size = page_size = config.page_size
+        self.table_width = config.cache_len // page_size
+        self.cache_len = config.cache_len
+        self.prompt_bucket = config.prompt_bucket
         # chunked prefill: divergent suffixes longer than this run as
         # fixed-size chunks (pages charged per chunk) instead of one
         # bucket-padded call — bounds the per-admission compute spike
         # without changing any token (chunk boundaries are invisible to
         # the attention math: each chunk attends to the pages the
         # previous chunks already wrote, exactly like decode does)
-        self.prefill_chunk = prefill_chunk
+        self.prefill_chunk = config.prefill_chunk
+        self.num_shards = config.num_shards
+        self.mcast_mode = config.mcast_mode
+        self.mesh = mesh
+        self.mesh_axis = config.mesh_axis
+        num_pages = config.num_pages
         if num_pages is None:
             # the dense fallback's footprint: one full-length cache per
-            # batch slot, plus the null page
-            num_pages = 1 + max_batch * self.table_width
-        self.pool = PagePool(num_pages, page_size)
+            # batch slot, plus the null page — rounded up so every shard
+            # owns an equal page range AND can hold at least one
+            # full-length request (admission routes a request to a
+            # single shard)
+            per_shard = max(
+                -(-self.max_batch * self.table_width // self.num_shards),
+                self.table_width)
+            num_pages = 1 + self.num_shards * per_shard
+        self.pool = PagePool(num_pages, page_size, num_shards=self.num_shards)
         self.prefix = PrefixCache(self.pool, page_size)
-        self.sched = Scheduler(self.pool, self.prefix, watermark=watermark)
-        self.caches = lm.init_paged_cache(cfg, num_pages, page_size, kv_dtype)
+        self.sched = Scheduler(self.pool, self.prefix,
+                               watermark=config.watermark)
+        # with a mesh, the device page arrays are sharded over the page
+        # axis; GSPMD needs the page count divisible by the axis size
+        # (the logical pool keeps num_pages — the trailing pad pages are
+        # never allocated)
+        self.num_device_pages = num_pages
+        if mesh is not None:
+            n_dev = dict(mesh.shape)[self.mesh_axis]
+            self.num_device_pages = -(-num_pages // n_dev) * n_dev
+        self.caches = lm.init_paged_cache(
+            cfg, self.num_device_pages, page_size, config.kv_dtype)
+        if mesh is not None:
+            def shard_leaf(a):
+                spec = PartitionSpec(
+                    *([None, None, self.mesh_axis] + [None] * (a.ndim - 3)))
+                return jax.device_put(a, NamedSharding(mesh, spec))
+
+            self.caches = _page_tree_map(
+                lambda c: type(c)(*[shard_leaf(a) for a in c]), self.caches)
         self.slots: dict[int, _Slot] = {}
         self._admit_seq = 0
         self._requeue: list[Request] = []  # preempted, waiting to swap in
         self.n_preempted = 0
         self.n_cow = 0
 
+        # page-chain broadcast accounting: payload = bytes of the pages
+        # delivered (once), fabric = what each participant moves under
+        # the configured multicast mode (the per-device bytes_model —
+        # the unicast/sw_tree/hw hierarchy CI's bench row gates on)
+        self.n_broadcast_chains = 0
+        self.n_broadcast_pages = 0
+        self.broadcast_payload_bytes = 0
+        self.broadcast_fabric_bytes = 0.0
+        total_bytes = sum(a.nbytes for a in jax.tree.leaves(self.caches))
+        self.page_nbytes = total_bytes // self.num_device_pages
+        self._fabric_mult = mcast.bytes_model(
+            1, self.num_shards, per_device=True)[self.mcast_mode]
+
         # degradation state: detectors are opt-in flags; the counters
         # below surface in stats() so a degraded-but-alive server is
         # visible rather than silently slow
-        self.kv_guard = kv_guard
-        self.kernel_fallback = kernel_fallback
-        self.fp = guard.PageFingerprints() if kv_guard else None
+        self.kv_guard = config.kv_guard
+        self.kernel_fallback = config.kernel_fallback
+        self.fp = guard.PageFingerprints() if self.kv_guard else None
         self.failed: list[Request] = []  # permanently failed (typed error)
         self.rejections: Counter[str] = Counter()
         self.n_fallback = 0
@@ -205,7 +275,7 @@ class PagedEngine:
         # With the kernel fallback armed, nothing is donated — a failed
         # primary call must leave its inputs intact for the reference
         # retry (part of the measured guard overhead).
-        donate = () if kernel_fallback else (1,)
+        donate = () if self.kernel_fallback else (1,)
 
         def decode(p, c, t, i, bt, ln):
             return lm.decode_step(p, cfg, c, t, i, block_table=bt, lengths=ln)
@@ -240,6 +310,23 @@ class PagedEngine:
             )
 
         self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
+
+        def bcast_pages(caches, src, dst):
+            # one launch copies a whole page chain shard-to-shard: with a
+            # mesh, src pages live on the owning shard's device and dst
+            # on the consumer's, so GSPMD lowers this gather+scatter to
+            # the actual cross-device transfer (mode-specific collective
+            # schedules live in dist/mcast.py; the engine accounts their
+            # fabric bytes via bytes_model).  src/dst are fixed-width,
+            # null-page padded — the pad lanes self-copy page 0.
+            return _page_tree_map(
+                lambda c: type(c)(
+                    *[a.at[:, :, dst].set(a[:, :, src]) for a in c]
+                ),
+                caches,
+            )
+
+        self._bcast_pages = jax.jit(bcast_pages, donate_argnums=(0,))
         self._gather_pages = jax.jit(
             lambda caches, ids: _page_tree_map(
                 lambda c: type(c)(*[a[:, :, ids] for a in c]), caches
@@ -271,6 +358,38 @@ class PagedEngine:
         """Fixed-width page-id vector (padded with the null page) so the
         swap gather/scatter jits compile once, not once per page count."""
         return jnp.asarray(self._table_row(pages))
+
+    def _pick_shard(self, req: Request) -> int:
+        """The pool shard an admission allocates from: the request's
+        pinned shard when set (host-side routing), else the shard with
+        the most free pages, ties to the lowest index.  Decided from
+        committed pool state only, so the async loop and the sync oracle
+        route identically for the same admission order."""
+        if req.shard is not None:
+            if not 0 <= req.shard < self.num_shards:
+                raise ValueError(
+                    f"request {req.rid}: pinned shard {req.shard} out of "
+                    f"range (num_shards={self.num_shards})")
+            return req.shard
+        return max(range(self.num_shards),
+                   key=lambda s: (self.pool.free_pages_on(s), -s))
+
+    def _broadcast_chain(self, src: list[int], dst: list[int]) -> None:
+        """Deliver the device bytes of cached pages ``src`` (copies on
+        other shards) into freshly allocated local pages ``dst`` — the
+        page-chain multicast crossing the mesh — and account the
+        traffic under the configured ``mcast_mode``."""
+        pad = np.zeros(self.table_width, np.int32)
+        s, d = pad.copy(), pad.copy()
+        s[: len(src)] = src
+        d[: len(dst)] = dst
+        self.caches = self._bcast_pages(
+            self.caches, jnp.asarray(s), jnp.asarray(d))
+        self.n_broadcast_chains += 1
+        self.n_broadcast_pages += len(dst)
+        payload = len(dst) * self.page_nbytes
+        self.broadcast_payload_bytes += payload
+        self.broadcast_fabric_bytes += payload * self._fabric_mult
 
     # -- guarded kernel dispatch --------------------------------------------
     def _ref_variant(self, name):
@@ -345,31 +464,58 @@ class PagedEngine:
                 f"{self.cache_len}"
             )
         ref0 = list(self.pool._ref) if self.kv_guard else None
+        shard = self._pick_shard(req)
         # match BEFORE the watermark check: the refs it takes pin the
         # chain against can_admit's prefix eviction; a rejected
-        # admission fully unwinds it (refs and stats)
-        shared, n_matched = self.prefix.match(tokens)
-        if self.kv_guard and shared:
-            bad = self.fp.verify(self.caches, shared)
+        # admission fully unwinds it (refs and stats).  Only this
+        # shard's local copies match; the chain's continuation on other
+        # shards is a broadcast candidate (refs taken only on commit)
+        shared, n_matched = self.prefix.match(tokens, shard)
+        remote = self.prefix.remote_continuation(tokens, shard, len(shared))
+        if self.kv_guard and (shared or remote):
+            bad = self.fp.verify(
+                self.caches, shared + [pid for _, pid in remote])
             if bad:
                 # corruption caught at the sharing point: quarantine the
                 # chain (and its poisoned readers) instead of letting it
-                # multicast to this and every later consumer
+                # multicast — or broadcast cross-shard — to this and
+                # every later consumer
                 self.prefix.unmatch(shared, len(tokens))
                 self._quarantine(bad)
-                shared, n_matched = [], 0
+                shared, n_matched, remote = [], 0, []
                 ref0 = list(self.pool._ref) if self.kv_guard else None
+        # broadcast pages count as fresh demand: they are allocated on
+        # this shard like any other fresh page — only their *bytes* come
+        # over the fabric instead of through a re-prefill
         fresh_needed = self.sched.pages_for(len(tokens) + 1) - len(shared)
-        rej = self.sched.check_admission(fresh_needed)
+        rej = self.sched.check_admission(fresh_needed, shard)
         if rej is not None:
             self.prefix.unmatch(shared, len(tokens))
             self._assert_refs_unchanged(ref0, "rejected admission")
             return self._reject(rej)
+        if remote:
+            # the multicast at pod scale: the owning shard prefilled the
+            # chain once; every other shard receives the bytes via one
+            # collective instead of re-running the model over the prefix
+            got = self.pool.alloc(len(remote), shard)
+            if got is None:  # injected exhaustion after a green check
+                self.prefix.unmatch(shared, len(tokens))
+                self._assert_refs_unchanged(ref0, "rejected admission")
+                return self._reject(Rejected("pool-dry", len(remote)))
+            self._broadcast_chain([pid for _, pid in remote], got)
+            self.prefix.commit_broadcast([n for n, _ in remote], shard, got)
+            if self.kv_guard:
+                self.fp.record(self.caches, got)
+            shared = shared + got
+            n_matched += len(got) * self.page_size
+            # the commit is durable even if the admission later unwinds
+            # (the tree keeps the copies) — re-baseline the refcount net
+            ref0 = list(self.pool._ref) if self.kv_guard else None
 
         if n_matched == 0:
             # cold prompt: the dense path's own prefill, scattered into
             # pages — bit-identical bytes to the dense fallback
-            fresh = self.pool.alloc(fresh_needed)
+            fresh = self.pool.alloc(fresh_needed, shard)
             if fresh is None:  # injected exhaustion after a green check
                 self._assert_refs_unchanged(ref0, "rejected admission")
                 return self._reject(Rejected("pool-dry", fresh_needed))
@@ -402,7 +548,7 @@ class PagedEngine:
                     len(pages) * self.page_size, end
                 )
                 if need:
-                    got = self.pool.alloc(need)
+                    got = self.pool.alloc(need, shard)
                     if got is None:  # injected mid-suffix exhaustion
                         fresh_far = [p for p in pages if p not in shared]
                         if fresh_far:
@@ -420,7 +566,7 @@ class PagedEngine:
                     jnp.asarray([n_matched + c0], jnp.int32),
                     jnp.asarray([n_matched + c0 + len(ctoks)], jnp.int32),
                 )
-        self.prefix.insert(tokens, pages)
+        self.prefix.insert(tokens, pages, shard)
         n_tree = len(tokens) // self.page_size
         if self.kv_guard and n_tree:
             self.fp.record(self.caches, pages[:n_tree])
@@ -432,7 +578,7 @@ class PagedEngine:
         self.slots[slot] = _Slot(
             req=req, pages=pages, length=len(tokens),
             last_tok=req.out[-1] if replay else int(jnp.argmax(logits[0, -1])),
-            admit_seq=self._admit_seq,
+            admit_seq=self._admit_seq, shard=shard,
         )
         self._admit_seq += 1
         if not replay:
@@ -520,10 +666,11 @@ class PagedEngine:
             return _SWAP_LOST
         if checksum is not None and guard.blob_checksum(data) != checksum:
             return _SWAP_LOST
-        rej = self.sched.check_admission(n_pages)
+        shard = self._pick_shard(req)  # swap-in re-routes like any admission
+        rej = self.sched.check_admission(n_pages, shard)
         if rej is not None:
             return self._reject(rej)
-        pages = self.pool.alloc(n_pages)
+        pages = self.pool.alloc(n_pages, shard)
         if pages is None:  # injected exhaustion after a green check
             return self._reject(Rejected("pool-dry", n_pages))
         ids = self._pages_ids_fixed(pages)
@@ -531,49 +678,66 @@ class PagedEngine:
         req._swap = None
         self.slots[slot] = _Slot(
             req=req, pages=pages, length=length, last_tok=last_tok,
-            admit_seq=self._admit_seq,
+            admit_seq=self._admit_seq, shard=shard,
         )
         self._admit_seq += 1
         return True
 
-    def _pick_victim(self, exclude: set[int] = frozenset()) -> int | None:
+    def _pick_victim(self, exclude: set[int] = frozenset(),
+                     shard: int | None = None) -> int | None:
+        """Youngest running slot outside ``exclude`` — restricted to
+        ``shard``'s slots when given: preempting a slot on another shard
+        frees pages the starved allocation cannot use."""
         order = sorted(
-            (s for s in self.slots if s not in exclude),
+            (s for s in self.slots
+             if s not in exclude
+             and (shard is None or self.slots[s].shard == shard)),
             key=lambda s: self.slots[s].admit_seq,
         )
         return self.sched.pick_victim(order)
 
     # -- copy-on-write / fork ----------------------------------------------
-    def fork(self, slot: int, req: Request) -> int | None:
+    def fork(self, slot: int, req: Request,
+             shard: int | None = None) -> int | None:
         """Fork a running request: the child shares *every* page of the
         parent (one refcount bump per page — no copies); the next write
-        to the shared tail page copy-on-writes.  Returns the child slot."""
+        to the shared tail page copy-on-writes.  Returns the child slot.
+
+        ``shard`` routes the child's *future* allocations (page faults,
+        COW copies) to another shard — a cross-shard fork keeps reading
+        the parent's pages where they are and localises only its
+        divergence; default is the parent's shard (or the request's
+        pinned one)."""
         child_slot = self._free_slot()
         if child_slot is None:
             return None
         st = self.slots[slot]
+        if shard is None:
+            shard = st.shard if req.shard is None else req.shard
         self.pool.share(st.pages)
         self.slots[child_slot] = _Slot(
             req=req, pages=list(st.pages), length=st.length,
-            last_tok=st.last_tok, admit_seq=self._admit_seq,
+            last_tok=st.last_tok, admit_seq=self._admit_seq, shard=shard,
         )
         self._admit_seq += 1
         req.out.extend(st.req.out)
         return child_slot
 
-    def _alloc_for_decode(self, n: int, *, exclude: set[int]) -> list[int] | None:
-        """Allocate decode pages, escalating: free list -> prefix
-        eviction -> preemption of the youngest request not in
-        ``exclude`` (a slot never preempts itself via a *victim* pick —
-        progress)."""
+    def _alloc_for_decode(self, n: int, *, exclude: set[int],
+                          shard: int = 0) -> list[int] | None:
+        """Allocate decode pages on ``shard``, escalating: free list ->
+        prefix eviction -> preemption of the youngest same-shard request
+        not in ``exclude`` (a slot never preempts itself via a *victim*
+        pick — progress; a slot on another shard is never preempted —
+        its pages could not satisfy this shard's demand)."""
         while True:
-            if self.sched.reclaim(n):
-                got = self.pool.alloc(n)
+            if self.sched.reclaim(n, shard):
+                got = self.pool.alloc(n, shard)
                 if got is not None:
                     return got
                 # an armed fault plan can fail the alloc even after a
                 # green reclaim — fall through to the escalation below
-            victim = self._pick_victim(exclude)
+            victim = self._pick_victim(exclude, shard)
             if victim is None:
                 return None
             self._preempt(victim)
@@ -589,18 +753,20 @@ class PagedEngine:
         if need >= self.table_width:
             raise RuntimeError(f"request {st.req.rid} overran cache_len")
         if need >= len(st.pages):
-            got = self._alloc_for_decode(1, exclude={slot})
+            got = self._alloc_for_decode(1, exclude={slot}, shard=st.shard)
             if got is None:
                 self._requeue_degraded(slot, "page fault with pool exhausted")
                 return False
             st.pages.extend(got)
         elif self.pool.refcount(st.pages[need]) > 1:
-            res = self.pool.cow(st.pages[need])
+            # the private copy lands on the slot's own shard — a forked
+            # child routed cross-shard localises its divergence here
+            res = self.pool.cow(st.pages[need], st.shard)
             if res is None:  # pool dry: make room, then retry the COW
-                got = self._alloc_for_decode(1, exclude={slot})
+                got = self._alloc_for_decode(1, exclude={slot}, shard=st.shard)
                 if got is not None:
                     self.pool.release(got)
-                    res = self.pool.cow(st.pages[need])
+                    res = self.pool.cow(st.pages[need], st.shard)
             if res is None:
                 self._requeue_degraded(slot, "COW failure with pool exhausted")
                 return False
@@ -691,7 +857,7 @@ class PagedEngine:
 
     # -- introspection ------------------------------------------------------
     def stats(self) -> dict:
-        return {
+        out = {
             "pool": dataclasses.asdict(self.pool.stats),
             "free_pages": self.pool.free_pages,
             "prefix_pages": len(self.prefix),
@@ -705,11 +871,25 @@ class PagedEngine:
             "quarantined_pages": self.n_quarantined_pages,
             "degrade_requeues": self.n_degrade_requeues,
             "failed": len(self.failed),
+            "num_shards": self.num_shards,
+            "broadcast_chains": self.n_broadcast_chains,
+            "broadcast_pages": self.n_broadcast_pages,
+            "broadcast_payload_bytes": self.broadcast_payload_bytes,
+            "broadcast_fabric_bytes": self.broadcast_fabric_bytes,
         }
+        for s in range(self.num_shards):
+            out[f"shard{s}_free_pages"] = self.pool.free_pages_on(s)
+        return out
 
     # stats() keys that are point-in-time gauges, not cumulative counters:
     # stats_delta reports their current value rather than a difference
-    _STAT_GAUGES = frozenset({"free_pages", "prefix_pages", "peak_in_use"})
+    _STAT_GAUGES = frozenset(
+        {"free_pages", "prefix_pages", "peak_in_use", "num_shards"})
+
+    def _is_gauge(self, key: str) -> bool:
+        k = key.removeprefix("pool_")
+        return (k in self._STAT_GAUGES
+                or (k.startswith("shard") and k.endswith("_free_pages")))
 
     def flat_stats(self) -> dict:
         """:meth:`stats` with the nesting removed: ``pool`` counters as
@@ -732,12 +912,12 @@ class PagedEngine:
         per-window consumers — the metrics snapshot, a bench row's
         per-trace accounting — never re-diff nested cumulative stats by
         hand.  Gauges (``free_pages``, ``prefix_pages``,
-        ``pool_peak_in_use``) report their current value."""
+        ``pool_peak_in_use``, ``num_shards``, ``shard*_free_pages``)
+        report their current value."""
         flat = self.flat_stats()
         prev = getattr(self, "_stats_prev", {})
         self._stats_prev = flat
         return {
-            k: v if k.removeprefix("pool_") in self._STAT_GAUGES
-            else v - prev.get(k, 0)
+            k: v if self._is_gauge(k) else v - prev.get(k, 0)
             for k, v in flat.items()
         }

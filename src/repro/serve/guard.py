@@ -65,11 +65,18 @@ def check_pool(pool, holders: Iterable[Sequence[int]] | None = None) -> None:
     refcount must equal exactly the number of chains holding it — the
     multicast fanout cross-count.
     """
-    free = list(pool._free)
+    free = pool.free_ids()
     free_set = set(free)
     if len(free_set) != len(free):
         dupes = [p for p, c in Counter(free).items() if c > 1]
         raise GuardViolation(f"free list holds duplicate page ids: {dupes}")
+    for s, shard_free in enumerate(pool._free):
+        stray = [pid for pid in shard_free if pool.shard_of(pid) != s]
+        if stray:
+            raise GuardViolation(
+                f"shard {s} free list holds pages owned by another shard: "
+                f"{stray} — per-shard containment violated"
+            )
     if NULL_PAGE in free_set:
         raise GuardViolation("null page 0 is on the free list")
     if pool._ref[NULL_PAGE] != 0:

@@ -240,7 +240,27 @@ class ServeMetrics:
         fb = kernels.fallback_stats()
         snap["kernel_fallback_calls"] = fb.calls
         snap["kernel_fallbacks"] = fb.fallbacks
+        # mesh-sharding / page-broadcast surface: always present (the
+        # single-host defaults when no engine rides along), cumulative
+        # run totals — not deltas — so one snapshot answers "how much
+        # fabric did broadcasts move" without windowing
+        snap["num_shards"] = 1
+        snap["mcast_mode"] = "unicast"
+        snap["broadcast_chains"] = 0
+        snap["broadcast_pages"] = 0
+        snap["broadcast_payload_bytes"] = 0
+        snap["broadcast_fabric_bytes"] = 0
         if engine is not None:
+            snap["num_shards"] = engine.num_shards
+            snap["mcast_mode"] = engine.mcast_mode
+            snap["broadcast_chains"] = engine.n_broadcast_chains
+            snap["broadcast_pages"] = engine.n_broadcast_pages
+            snap["broadcast_payload_bytes"] = engine.broadcast_payload_bytes
+            snap["broadcast_fabric_bytes"] = engine.broadcast_fabric_bytes
+            for s in range(engine.num_shards):
+                free = engine.pool.free_pages_on(s)
+                snap[f"shard{s}_free_pages"] = free
+                snap[f"shard{s}_in_use"] = engine.pool.pages_per_shard - free
             for k, v in engine.stats_delta().items():
                 snap[f"engine_{k}"] = v
         if fault_plan is not None:
@@ -255,6 +275,7 @@ class ServeMetrics:
 
 _INT = int
 _NUM = (int, float)
+_STR = str
 
 # fixed keys every snapshot must carry, with their required types
 SNAPSHOT_SCHEMA: dict[str, type | tuple] = {
@@ -282,14 +303,22 @@ SNAPSHOT_SCHEMA: dict[str, type | tuple] = {
     "bucket_compiles": _INT,
     "kernel_fallback_calls": _INT,
     "kernel_fallbacks": _INT,
+    "num_shards": _INT,
+    "mcast_mode": _STR,
+    "broadcast_chains": _INT,
+    "broadcast_pages": _INT,
+    "broadcast_payload_bytes": _NUM,
+    "broadcast_fabric_bytes": _NUM,
 }
 
-# dynamic key families (per-reason / per-site / per-engine-counter) are
-# allowed only under these prefixes — everything else is a schema error
+# dynamic key families (per-reason / per-site / per-engine-counter /
+# per-shard gauge) are allowed only under these prefixes — everything
+# else is a schema error
 SNAPSHOT_DYNAMIC_PREFIXES: dict[str, type | tuple] = {
     "rejected_": _INT,
     "engine_": _NUM,
     "fault_fired_": _INT,
+    "shard": _NUM,
 }
 
 

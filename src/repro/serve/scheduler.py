@@ -74,28 +74,39 @@ class Scheduler:
         return max(0, self.pages_for(end_tokens) - self.pages_for(covered_tokens))
 
     # ------------------------------------------------------------------
-    def _evict_for(self, deficit: int) -> bool:
-        """Evict cached prefix chains to cover ``deficit`` pages — but
-        only when eviction can actually cover it: a demand that cannot
-        succeed must not destroy the prefix cache as a side effect (it
-        would be re-probed every scheduling round)."""
+    def _free(self, shard: int | None) -> int:
+        """Free pages in the admission's capacity domain: one shard's
+        free list when the pool is mesh-sharded and the caller names the
+        shard it allocates from, else the whole pool (the single-shard
+        degenerate case and the shard-agnostic test surface)."""
+        return (self.pool.free_pages if shard is None
+                else self.pool.free_pages_on(shard))
+
+    def _evict_for(self, deficit: int, shard: int | None = None) -> bool:
+        """Evict cached prefix chains to cover ``deficit`` pages (on
+        ``shard`` when given — reclamation must free capacity *where*
+        the admission allocates) — but only when eviction can actually
+        cover it: a demand that cannot succeed must not destroy the
+        prefix cache as a side effect (it would be re-probed every
+        scheduling round)."""
         if deficit <= 0:
             return True
         if faults.fires("sched.evict") is not None:
             return False  # injected reclamation failure: nothing evicted
-        if self.prefix is None or self.prefix.evictable_pages() < deficit:
+        if self.prefix is None or self.prefix.evictable_pages(shard) < deficit:
             return False
-        self.prefix.evict(deficit)
+        self.prefix.evict(deficit, shard)
         return True
 
-    def can_admit(self, new_pages: int) -> bool:
+    def can_admit(self, new_pages: int, shard: int | None = None) -> bool:
         """Watermark admission test (``new_pages`` = pages the request
         needs *beyond* what prefix sharing already covers).  Evicts
         cold prefix chains first if — and only if — that unblocks the
         admission."""
-        return self.check_admission(new_pages) is None
+        return self.check_admission(new_pages, shard) is None
 
-    def check_admission(self, new_pages: int) -> Rejected | None:
+    def check_admission(self, new_pages: int,
+                        shard: int | None = None) -> Rejected | None:
         """Structured form of :meth:`can_admit`: ``None`` when the
         request fits (cold prefix chains are evicted first if — and only
         if — that unblocks it), else a :class:`Rejected` naming the
@@ -103,20 +114,24 @@ class Scheduler:
         cover the demand but the decode-headroom reserve would be
         breached; ``"pool-dry"`` means it could not, even at watermark
         0 — the caller should expect to wait for ``retry_after_pages``
-        pages (or escalate to preemption)."""
-        deficit = new_pages + self.watermark - self.pool.free_pages
-        self._evict_for(deficit)
-        if self.pool.free_pages - new_pages >= self.watermark:
+        pages (or escalate to preemption).  With a mesh-sharded pool the
+        watermark is **per shard**: the demand, the reserve, and any
+        eviction all bind on ``shard``'s free list — one busy shard
+        rejecting an admission says nothing about its siblings."""
+        deficit = new_pages + self.watermark - self._free(shard)
+        self._evict_for(deficit, shard)
+        if self._free(shard) - new_pages >= self.watermark:
             return None
-        reason = "pool-dry" if new_pages > self.pool.free_pages else "watermark"
-        return Rejected(reason, new_pages + self.watermark - self.pool.free_pages)
+        reason = "pool-dry" if new_pages > self._free(shard) else "watermark"
+        return Rejected(reason, new_pages + self.watermark - self._free(shard))
 
-    def reclaim(self, n_pages: int) -> bool:
+    def reclaim(self, n_pages: int, shard: int | None = None) -> bool:
         """Make ``n_pages`` free for a *running* request (decode page
-        fault / COW): prefix eviction only — preemption is the caller's
-        escalation.  Returns True when the pages are available."""
-        self._evict_for(n_pages - self.pool.free_pages)
-        return self.pool.free_pages >= n_pages
+        fault / COW) on ``shard`` when given: prefix eviction only —
+        preemption is the caller's escalation.  Returns True when the
+        pages are available."""
+        self._evict_for(n_pages - self._free(shard), shard)
+        return self._free(shard) >= n_pages
 
     def pick_victim(self, slots_by_admit_order: Sequence[int]) -> int | None:
         """Preemption victim among running slots (admission order,

@@ -53,6 +53,7 @@ import time
 import jax.numpy as jnp
 
 from repro.serve import faults
+from repro.serve.config import ServeConfig
 from repro.serve.engine import PagedEngine, Request, bucket_len
 from repro.serve.metrics import ServeMetrics
 
@@ -136,10 +137,15 @@ class ServeLoop:
     coordinate through a condition on that lock plus the emit queue, so
     submission and stream consumption never block on device work."""
 
-    def __init__(self, engine: PagedEngine, *, metrics: ServeMetrics | None = None,
+    def __init__(self, engine: PagedEngine, *, config: ServeConfig | None = None,
+                 metrics: ServeMetrics | None = None,
                  max_slots: int | None = None, queue_cap: int | None = None,
                  detokenize=None, clock=time.monotonic,
                  admission_retry_s: float = 0.005):
+        if config is not None:
+            # the typed config fills loop knobs not given explicitly
+            max_slots = config.max_slots if max_slots is None else max_slots
+            queue_cap = config.queue_cap if queue_cap is None else queue_cap
         self.engine = engine
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.max_slots = min(max_slots or engine.max_batch, engine.max_batch)
@@ -179,7 +185,10 @@ class ServeLoop:
         if len(req.prompt) + req.max_new + 1 > eng.cache_len:
             return "too-long"
         demand = eng.sched.pages_for(len(req.prompt) + req.max_new + 1)
-        if demand > eng.pool.num_pages - 1:  # page 0 is the null page
+        # a request is admitted onto ONE shard, so the bound is the
+        # per-shard capacity (for num_shards=1 this is the whole pool
+        # minus the null page, as before)
+        if demand > eng.pool.pages_per_shard:
             return "too-large"
         return None
 

@@ -1,0 +1,29 @@
+"""Mesh-sharded paged serving, run in a subprocess with 4 fake devices.
+
+The main pytest session must stay single-device (the dry-run owns the
+XLA_FLAGS trick), so the multi-device serving assertions — page arrays
+sharded over a real mesh, every mcast mode token-identical to the
+single-shard oracle, chains broadcast not re-prefilled — run in one
+subprocess (tests/_distserve_main.py).  CI's dist-serve-smoke job runs
+this plus the launcher-level trace parity legs.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_mesh_sharded_serving_scenarios():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "tests", "_distserve_main.py")],
+        env=env, capture_output=True, text=True, timeout=1200,
+    )
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "ALL_DISTSERVE_OK" in proc.stdout

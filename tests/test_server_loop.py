@@ -344,9 +344,9 @@ def test_loadgen_empty_draw_still_yields_one_request():
 
 
 def test_chaos_cli_spec_parsing():
-    from repro.launch.serve import _parse_chaos
-    faults = _parse_chaos(["swap.drop:0.25", "pool.alloc"])
+    from repro.serve.config import parse_chaos
+    faults = parse_chaos(["swap.drop:0.25", "pool.alloc"])
     assert [(f.site, f.prob) for f in faults] == [
         ("swap.drop", 0.25), ("pool.alloc", 0.05)]
     with pytest.raises(ValueError):
-        _parse_chaos(["not.a.site:0.5"])
+        parse_chaos(["not.a.site:0.5"])
