@@ -18,6 +18,10 @@ interpret-mode timings for the forced-pallas kernel rows):
   ``kernel_fallback`` non-finite check and undonated cache buffers);
   the derived column reports the overhead vs. the unguarded row and
   asserts it stays under 5%.
+* ``kernel_serve_trace_overhead`` — the bf16 decode workload with the
+  ``repro.obs`` tracing recorder armed (engine.step/engine.decode spans
+  plus pool/prefix instants per step); the derived column reports the
+  overhead vs. the untraced row and asserts it stays under 5%.
 * ``kernel_serve_prefill_cold``   — admission latency for a cold
   (prefix-miss) prompt: the whole prompt runs through the model.
 * ``kernel_serve_prefill_hit``    — admission latency for a prompt
@@ -119,7 +123,8 @@ def run(only: str | None = None) -> list[str]:
         return best * 1e6, 8 * DECODE_STEPS_PER_CALL / best
 
     # -- decode throughput: 8 requests sharing the 512-token prefix ---------
-    if want("kernel_serve_paged_decode", "kernel_serve_guard_overhead"):
+    if want("kernel_serve_paged_decode", "kernel_serve_guard_overhead",
+            "kernel_serve_trace_overhead"):
         decode_us, toks_per_s = decode_row("bf16")
         if want("kernel_serve_paged_decode"):
             rows["kernel_serve_paged_decode"] = (
@@ -141,6 +146,21 @@ def run(only: str | None = None) -> list[str]:
                 f"kernel_serve_guard_overhead,{guard_us:.1f},"
                 f"decode with kv-guard + kernel-fallback armed: "
                 f"{overhead:+.1f}% vs unguarded (gate <5%)"
+            )
+        if want("kernel_serve_trace_overhead"):
+            # same workload with the obs recorder armed: per step, two
+            # span dict appends (engine.step + engine.decode) and the
+            # release instants — the tracing-on price of the PR-9 layer
+            from repro.obs import trace as obs_trace
+
+            with obs_trace.tracing(max_events=1 << 16):
+                traced_us, _ = decode_row("bf16")
+            t_overhead = (traced_us - decode_us) / decode_us * 100.0
+            assert t_overhead < 5.0, (traced_us, decode_us, t_overhead)
+            rows["kernel_serve_trace_overhead"] = (
+                f"kernel_serve_trace_overhead,{traced_us:.1f},"
+                f"decode with obs tracing armed: "
+                f"{t_overhead:+.1f}% vs untraced (gate <5%)"
             )
 
     if want("kernel_paged_decode_int8"):

@@ -24,6 +24,12 @@ Benches:
   kernel_serve_load_*  async serve-loop load rows: sustained tok/s +
                TTFT/ITL percentiles under a seeded Poisson trace
                (bench_serve_load.py)
+
+The ``kernel_serve_trace_overhead`` row gates the ``repro.obs`` tracing
+layer at <5% decode overhead when armed.  To inspect a trace offline,
+``python -m repro.obs.analyze TRACE.json`` prints the multicast-
+efficiency report (B-fetches avoided, prefix pages multicast, fabric
+bytes per mode, TTFT decomposition) as a table.
 """
 from __future__ import annotations
 

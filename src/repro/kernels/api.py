@@ -77,6 +77,7 @@ import jax.numpy as jnp
 from jax.interpreters import ad as _ad
 
 from repro.kernels import autotune
+from repro.obs import trace
 from repro.kernels.flash_attention.flash_attention import (
     flash_attention,
     flash_attention_bwd_dkv,
@@ -355,8 +356,15 @@ class KernelOp:
         opts = self._normalize_opts(opts)
         problem = Problem(tuple(self.problem(*arrays)), jnp.dtype(arrays[0].dtype).name)
         pol = as_policy(policy) or get_policy()
+        rec = trace.active()
+        if rec is None:
+            sched, cfg = self.resolve(problem, pol, needs_vjp=_needs_vjp(*arrays))
+            return _invoke(self.name, sched, arrays, cfg, blocks, opts, pol)
+        t0, n_cached0 = rec.now(), autotune.cache_size()
         sched, cfg = self.resolve(problem, pol, needs_vjp=_needs_vjp(*arrays))
-        return _invoke(self.name, sched, arrays, cfg, blocks, opts, pol)
+        out = _invoke(self.name, sched, arrays, cfg, blocks, opts, pol)
+        _record_dispatch(rec, t0, self.name, sched, problem, cfg, pol, n_cached0)
+        return out
 
 
 _REGISTRY: dict[str, KernelOp] = {}
@@ -407,6 +415,31 @@ def resolve(
         policy, needs_vjp=needs_vjp,
     )
     return Resolution(sched.name, sched.backend, cfg, sched.vjp)
+
+
+def _record_dispatch(rec, t0, op_name, sched, problem, cfg, pol, n_cached0):
+    """Record one ``dispatch.<op>`` span on the armed recorder.
+
+    Called per *Python-level* kernel call: under ``jax.jit`` that is
+    trace time, so a compiled program records one span per kernel site
+    per compilation — the dispatch decisions (schedule, backend, block
+    config, autotune outcome), not per-execution timing; the engine's
+    ``engine.*`` spans carry the per-call timeline.  ``autotune_cached``
+    is derived from the cache-size delta across ``resolve`` and omitted
+    when the autotuner was never consulted."""
+    args = {
+        "op": op_name,
+        "schedule": sched.name,
+        "backend": sched.backend,
+        "shape": list(problem.shape),
+        "dtype": problem.dtype,
+    }
+    for key in ("gm", "bm", "bn", "bk"):
+        if key in cfg:
+            args[key] = cfg[key]
+    if pol.autotune and sched.autotune_schedule is not None:
+        args["autotune_cached"] = autotune.cache_size() == n_cached0
+    rec.complete(f"dispatch.{op_name}", t0, cat="kernel", args=args)
 
 
 def _bwd_policy_token(pol: DispatchPolicy) -> str | None:
@@ -821,10 +854,11 @@ def linear(
 
     mm = op("matmul")
     pol = as_policy(policy) or get_policy()
-    sched, cfg = mm.resolve(
-        Problem((m, k, n), jnp.dtype(x.dtype).name), pol,
-        needs_vjp=_needs_vjp(x, w, bias),
-    )
+    problem = Problem((m, k, n), jnp.dtype(x.dtype).name)
+    rec = trace.active()
+    t0 = rec.now() if rec is not None else 0.0
+    n_cached0 = autotune.cache_size() if rec is not None else 0
+    sched, cfg = mm.resolve(problem, pol, needs_vjp=_needs_vjp(x, w, bias))
     if sched.backend == "reference":
         # contracting dims listed high-to-low: einsum's canonical order,
         # so this lowers bit-identically to the einsum/@ sites it replaced
@@ -833,12 +867,17 @@ def linear(
             tuple(reversed(range(contract_dims))),
         )
         y = jax.lax.dot_general(x, w, (contract, ((), ())))
+        if rec is not None:
+            _record_dispatch(rec, t0, "matmul", sched, problem, cfg, pol,
+                             n_cached0)
         return _reference_epilogue(y, bias, opts)
 
     arrays = (x.reshape(m, k), w.reshape(k, n))
     if bias is not None:
         arrays += (bias.reshape(n),)
     y = _invoke("matmul", sched, arrays, cfg, blocks, opts, pol)
+    if rec is not None:
+        _record_dispatch(rec, t0, "matmul", sched, problem, cfg, pol, n_cached0)
     return y.reshape(*lead, *out_dims)
 
 
@@ -1113,6 +1152,10 @@ def call_with_fallback(primary, reference, *args, check=None):
         _FALLBACK_STATS.numeric_trips += 1
         _FALLBACK_STATS.last_error = "non-finite kernel output"
     _FALLBACK_STATS.fallbacks += 1
+    rec = trace.active()
+    if rec is not None:
+        rec.instant("kernel.fallback", cat="kernel",
+                    args={"error": _FALLBACK_STATS.last_error})
     return reference(*args), True
 
 

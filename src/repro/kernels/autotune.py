@@ -518,6 +518,12 @@ def cache_info() -> dict[tuple, dict[str, int]]:
     return {k: dict(v) for k, v in _CACHE.items()}
 
 
+def cache_size() -> int:
+    """Number of cached configs — cheap enough for hot-path probes (the
+    dispatch tracer diffs it across ``resolve`` to tell hit from miss)."""
+    return len(_CACHE)
+
+
 def clear_cache(*, disk: bool = False) -> None:
     """Drop the in-memory cache.  ``disk=True`` also deletes the
     persisted file and re-arms load-on-first-use (a clean slate);

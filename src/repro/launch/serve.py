@@ -217,6 +217,7 @@ def main() -> None:
     # --max-slots --cache-len --page-size --pages --kv-dtype --prompt-bucket
     # --prefill-chunk --watermark --queue-cap --kv-guard --kernel-fallback
     # --chaos --seed --num-shards --mesh-axis --mcast-mode --pages-per-shard
+    # --trace
     add_serve_args(ap)
     args = ap.parse_args()
 
@@ -233,6 +234,17 @@ def main() -> None:
         else args.max_batch,
     )
     cfg = get_config(args.arch, reduced=args.reduced)
+    rec = _arm_trace(serve_cfg)
+    try:
+        _drive(args, cfg, serve_cfg)
+    finally:
+        # trace lands even on a SystemExit from undrained requests —
+        # the failing run is exactly the one worth profiling
+        if rec is not None:
+            _finish_trace(rec, serve_cfg.trace)
+
+
+def _drive(args, cfg, serve_cfg: ServeConfig) -> None:
     params = lm.init(cfg, jax.random.PRNGKey(serve_cfg.seed))
     if args.kv == "paged":
         mesh = None
@@ -324,6 +336,47 @@ def _run_server(args, cfg, serve_cfg: ServeConfig, engine: PagedEngine,
                if r.state is not Lifecycle.DRAINED}
         if bad:
             raise SystemExit(f"requests did not drain: {bad}")
+
+
+def _arm_trace(serve_cfg: ServeConfig):
+    """Arm the global obs recorder when ``--trace PATH`` was given.
+
+    Armed *before* the engine is built so jit-trace-time kernel
+    dispatch spans (``dispatch.*``) land in the trace too."""
+    if not serve_cfg.trace:
+        return None
+    from repro.obs import trace as obs_trace
+
+    # default Recorder clock is time.monotonic — the same clock
+    # ServeLoop/metrics read, so span endpoints share their timebase
+    rec = obs_trace.Recorder(meta={
+        "tool": "launch.serve",
+        "seed": serve_cfg.seed,
+        "num_shards": serve_cfg.num_shards,
+        "mcast_mode": serve_cfg.mcast_mode,
+    })
+    obs_trace.start(rec)
+    return rec
+
+
+def _finish_trace(rec, path: str) -> None:
+    """Disarm, export the trace, and write the schema-validated
+    efficiency report next to it (``PATH.report.json``).  Status lines
+    go to stderr only — stdout is the CI token-parity surface."""
+    from repro.obs import analyze as obs_analyze
+    from repro.obs import export as obs_export
+    from repro.obs import trace as obs_trace
+
+    obs_trace.stop()
+    obs_export.write(rec, path)
+    report = obs_analyze.analyze(obs_export.validate_trace(obs_export.to_chrome(rec)))
+    obs_analyze.validate_report(report)
+    report_path = path + ".report.json"
+    with open(report_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote trace {path} ({len(rec)} events, "
+          f"{rec.n_dropped} dropped) + report {report_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

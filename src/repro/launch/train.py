@@ -150,8 +150,24 @@ def main() -> None:
     ap.add_argument("--kernel-policy", default=None,
                     help='kernel dispatch policy, e.g. "tiled" or '
                          '"schedule=tiled,autotune=off" (see repro.kernels.api)')
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome trace-event JSON of the "
+                         "run here (kernel dispatch spans fire at jit trace "
+                         "time, so expect one span per compiled program)")
     args = ap.parse_args()
-    out = train_loop(args)
+    if args.trace:
+        from repro.obs import export as obs_export
+        from repro.obs import trace as obs_trace
+
+        rec = obs_trace.start(meta={"tool": "launch.train", "seed": args.seed})
+        try:
+            out = train_loop(args)
+        finally:
+            obs_trace.stop()
+            obs_export.write(rec, args.trace)
+            print(f"wrote trace {args.trace} ({len(rec)} events)")
+    else:
+        out = train_loop(args)
     print(f"done; final loss {out['final_loss']:.4f}")
 
 

@@ -1,0 +1,19 @@
+"""Structured tracing, Perfetto export, and offline efficiency analysis.
+
+``obs`` is deliberately stdlib-only at import time (no jax, no serve
+imports) so every hot module — ``serve/pagepool.py``, ``kernels/api.py``,
+``serve/faults.py`` — can import :mod:`repro.obs.trace` without cost or
+cycles.  The disabled path is one module-global read (the same pattern
+as ``faults.fires``): ``trace.active()`` returns ``None`` unless a
+:class:`~repro.obs.trace.Recorder` has been armed.
+"""
+from repro.obs.trace import Recorder, active, span, start, stop, tracing
+
+__all__ = [
+    "Recorder",
+    "active",
+    "span",
+    "start",
+    "stop",
+    "tracing",
+]

@@ -15,13 +15,14 @@ knob" stops scaling.  :class:`ServeConfig` is the single definition:
   each consumer re-checking its slice;
 * old keyword call sites (``PagedEngine(cfg, params, max_batch=8,
   num_pages=384)``) keep working through :func:`config_from_legacy`,
-  which maps the legacy names and warns **once per process** — the same
-  migration contract the PR 2 ``KernelOp`` registry used
-  (``kernels.api.warn_deprecated``).
+  which maps the legacy names and warns **once per call site** (module +
+  lineno) — the per-site variant of the migration contract the PR 2
+  ``KernelOp`` registry used (``kernels.api.warn_deprecated``).
 """
 from __future__ import annotations
 
 import dataclasses
+import sys
 import warnings
 from typing import Any
 
@@ -89,6 +90,11 @@ class ServeConfig:
                          type_=str, choices=MCAST_MODES)
     pages_per_shard: int | None = _f(None, "pool pages owned by each shard "
                                      "(alternative to --pages)", type_=int)
+    # --- observability (PR 9) ----------------------------------------
+    trace: str | None = _f(None, "write a Perfetto/Chrome trace-event "
+                           "JSON here (.jsonl for a flat event log); the "
+                           "analyzer report lands at PATH.report.json",
+                           type_=str)
 
     def __post_init__(self):
         if self.page_size < 1 or self.cache_len < self.page_size:
@@ -180,27 +186,34 @@ _LEGACY_MAP = {
     "kernel_fallback": "kernel_fallback",
 }
 
-_LEGACY_WARNED = False
+#: (filename, lineno) call sites already warned.  Keyed per site — not
+#: once per process — so a long-lived test session (or a notebook) that
+#: grows a *new* legacy call site still hears about it, while a loop
+#: hammering one site warns once.
+_LEGACY_WARNED: set[tuple[str, int]] = set()
 
 
-def config_from_legacy(legacy: dict[str, Any]) -> ServeConfig:
+def config_from_legacy(legacy: dict[str, Any], *, _depth: int = 2) -> ServeConfig:
     """Map PR 4-7 ``PagedEngine`` keywords onto a :class:`ServeConfig`.
 
-    Warns once per process (mirroring ``kernels.api.warn_deprecated``)
-    so existing call sites keep working while new code writes
+    Warns once per *call site* (module + lineno, ``_depth`` frames up —
+    the default skips this function and ``PagedEngine.__init__``) so
+    existing call sites keep working while new code writes
     ``PagedEngine(cfg, params, config=ServeConfig(...))``."""
-    global _LEGACY_WARNED
     unknown = sorted(set(legacy) - set(_LEGACY_MAP))
     if unknown:
         raise TypeError(f"PagedEngine: unknown keyword(s) {unknown}; "
                         f"known legacy keywords: {sorted(_LEGACY_MAP)}")
-    if legacy and not _LEGACY_WARNED:
-        _LEGACY_WARNED = True
-        warnings.warn(
-            "PagedEngine(**kwargs) keywords are deprecated; pass "
-            "config=ServeConfig(...) (serve/config.py). Legacy names map "
-            "as max_batch->max_slots, num_pages->pages.",
-            DeprecationWarning, stacklevel=3)
+    if legacy:
+        frame = sys._getframe(_depth)
+        site = (frame.f_code.co_filename, frame.f_lineno)
+        if site not in _LEGACY_WARNED:
+            _LEGACY_WARNED.add(site)
+            warnings.warn(
+                "PagedEngine(**kwargs) keywords are deprecated; pass "
+                "config=ServeConfig(...) (serve/config.py). Legacy names map "
+                "as max_batch->max_slots, num_pages->pages.",
+                DeprecationWarning, stacklevel=_depth + 1)
     return ServeConfig(**{_LEGACY_MAP[k]: v for k, v in legacy.items()})
 
 

@@ -85,6 +85,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import re
 from collections import Counter
 
 import jax
@@ -95,6 +96,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro import kernels
 from repro.dist import mcast
+from repro.obs import trace
 from repro.models import lm
 from repro.nn import kvquant
 from repro.nn.attention import PagedKvCache
@@ -254,6 +256,9 @@ class PagedEngine:
         self.page_nbytes = total_bytes // self.num_device_pages
         self._fabric_mult = mcast.bytes_model(
             1, self.num_shards, per_device=True)[self.mcast_mode]
+        self._fabric_mult_unicast = mcast.bytes_model(
+            1, self.num_shards, per_device=True)["unicast"]
+        self.kernel_calls: Counter[str] = Counter()  # per _dispatch name
 
         # degradation state: detectors are opt-in flags; the counters
         # below surface in stats() so a degraded-but-alive server is
@@ -390,6 +395,14 @@ class PagedEngine:
         payload = len(dst) * self.page_nbytes
         self.broadcast_payload_bytes += payload
         self.broadcast_fabric_bytes += payload * self._fabric_mult
+        rec = trace.active()
+        if rec is not None:
+            rec.instant("mcast.broadcast", cat="engine", args={
+                "pages": len(dst), "payload_bytes": payload,
+                "fabric_bytes": payload * self._fabric_mult,
+                "unicast_bytes": payload * self._fabric_mult_unicast,
+                "mode": self.mcast_mode,
+            })
 
     # -- guarded kernel dispatch --------------------------------------------
     def _ref_variant(self, name):
@@ -423,14 +436,22 @@ class PagedEngine:
                 out = (jnp.full_like(out[0], jnp.nan), out[1])
             return out
 
+        self.kernel_calls[name] += 1
+        rec = trace.active()
+        t0 = rec.now() if rec is not None else 0.0
         if not self.kernel_fallback:
-            return primary(*args)
-        out, fell_back = kernels.call_with_fallback(
-            primary, self._ref_variant(name), *args,
-            check=lambda o: kernels.all_finite(o[0]),
-        )
-        if fell_back:
-            self.n_fallback += 1
+            out = primary(*args)
+            fell_back = False
+        else:
+            out, fell_back = kernels.call_with_fallback(
+                primary, self._ref_variant(name), *args,
+                check=lambda o: kernels.all_finite(o[0]),
+            )
+            if fell_back:
+                self.n_fallback += 1
+        if rec is not None:
+            rec.complete(f"engine.{name}", t0, cat="kernel",
+                         args={"fallback": fell_back})
         return out
 
     # -- admission ----------------------------------------------------------
@@ -443,6 +464,16 @@ class PagedEngine:
         :class:`Rejected` otherwise (existing ``while queue and
         self._admit(...)`` loops keep working; callers that care read
         the reason)."""
+        rec = trace.active()
+        if rec is None:
+            return self._admit_impl(req)
+        t0 = rec.now()
+        res = self._admit_impl(req)
+        rec.complete("engine.admit", t0, cat="engine",
+                     args={"rid": req.rid, "ok": res is True})
+        return res
+
+    def _admit_impl(self, req: Request) -> bool | Rejected:
         slot = self._free_slot()
         if slot is None:
             return self._reject(Rejected("no-free-slot"))
@@ -456,6 +487,10 @@ class PagedEngine:
             # decode makes the replay token-identical)
             self.n_swap_dropped += 1
             req._swap = None
+            rec = trace.active()
+            if rec is not None:
+                rec.instant("engine.swap_lost", cat="engine",
+                            args={"rid": req.rid})
         replay = bool(req.out)
         tokens = req.prompt + req.out[:-1] if replay else req.prompt
         if len(req.prompt) + req.max_new + 1 > self.cache_len:
@@ -619,6 +654,10 @@ class PagedEngine:
         dropped = self.prefix.drop(bad_pages)
         self.fp.forget(dropped)
         self.n_quarantined_pages += len(dropped)
+        rec = trace.active()
+        if rec is not None:
+            rec.instant("engine.quarantine", cat="engine",
+                        args={"pages": len(dropped)})
         poisoned = set(bad_pages)
         for slot, st in list(self.slots.items()):
             if poisoned & set(st.pages):
@@ -653,6 +692,11 @@ class PagedEngine:
             if self.kv_guard and data is not None else None
         )
         st.req._swap = (data, len(st.pages), st.length, st.last_tok, checksum)
+        rec = trace.active()
+        if rec is not None:
+            rec.instant("engine.preempt", cat="engine",
+                        args={"rid": st.req.rid, "pages": len(st.pages),
+                              "shard": st.shard})
         self.pool.release(st.pages)
         self._requeue.append(st.req)
         self.n_preempted += 1
@@ -676,6 +720,11 @@ class PagedEngine:
         ids = self._pages_ids_fixed(pages)
         self.caches = self._scatter_pages(self.caches, ids, data)
         req._swap = None
+        rec = trace.active()
+        if rec is not None:
+            rec.instant("engine.swap_in", cat="engine",
+                        args={"rid": req.rid, "pages": n_pages,
+                              "shard": shard})
         self.slots[slot] = _Slot(
             req=req, pages=pages, length=length, last_tok=last_tok,
             admit_seq=self._admit_seq, shard=shard,
@@ -782,6 +831,17 @@ class PagedEngine:
     # -- main loop ----------------------------------------------------------
     def step(self) -> list[Request]:
         """One decode step over the active batch; returns finished requests."""
+        rec = trace.active()
+        if rec is None:
+            return self._step_impl()
+        t0 = rec.now()
+        n_slots = len(self.slots)
+        out = self._step_impl()
+        rec.complete("engine.step", t0, cat="engine",
+                     args={"n_slots": n_slots, "finished": len(out)})
+        return out
+
+    def _step_impl(self) -> list[Request]:
         for slot in sorted(self.slots, key=lambda s: self.slots[s].admit_seq):
             if slot in self.slots:  # a page fault may preempt later slots
                 self._ensure_writable(slot)
@@ -879,17 +939,23 @@ class PagedEngine:
         }
         for s in range(self.num_shards):
             out[f"shard{s}_free_pages"] = self.pool.free_pages_on(s)
+            out[f"shard{s}_in_use"] = (
+                self.pool.pages_per_shard - self.pool.free_pages_on(s))
         return out
 
     # stats() keys that are point-in-time gauges, not cumulative counters:
     # stats_delta reports their current value rather than a difference
     _STAT_GAUGES = frozenset(
         {"free_pages", "prefix_pages", "peak_in_use", "num_shards"})
+    # every per-shard stat is a point-in-time occupancy gauge; matching
+    # the whole family (rather than one hand-listed suffix) keeps new
+    # shard{s}_* keys from silently passing through as counter deltas
+    _SHARD_GAUGE_RE = re.compile(r"shard\d+_")
 
     def _is_gauge(self, key: str) -> bool:
         k = key.removeprefix("pool_")
         return (k in self._STAT_GAUGES
-                or (k.startswith("shard") and k.endswith("_free_pages")))
+                or self._SHARD_GAUGE_RE.match(k) is not None)
 
     def flat_stats(self) -> dict:
         """:meth:`stats` with the nesting removed: ``pool`` counters as
@@ -912,8 +978,8 @@ class PagedEngine:
         per-window consumers — the metrics snapshot, a bench row's
         per-trace accounting — never re-diff nested cumulative stats by
         hand.  Gauges (``free_pages``, ``prefix_pages``,
-        ``pool_peak_in_use``, ``num_shards``, ``shard*_free_pages``)
-        report their current value."""
+        ``pool_peak_in_use``, ``num_shards``, and the whole per-shard
+        ``shard{s}_*`` occupancy family) report their current value."""
         flat = self.flat_stats()
         prev = getattr(self, "_stats_prev", {})
         self._stats_prev = flat

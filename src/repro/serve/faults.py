@@ -46,6 +46,8 @@ from collections import Counter
 
 import numpy as np
 
+from repro.obs import trace
+
 SITES = (
     "pool.alloc",
     "pool.cow",
@@ -140,4 +142,10 @@ def fires(site: str) -> Fault | None:
     when no plan is armed, else the armed plan's :meth:`FaultPlan.fires`."""
     if _ACTIVE is None:
         return None
-    return _ACTIVE.fires(site)
+    fault = _ACTIVE.fires(site)
+    if fault is not None:
+        rec = trace.active()
+        if rec is not None:  # chaos runs become visually replayable
+            rec.instant(f"fault.{site}", cat="fault",
+                        args={"site": site, "hit": _ACTIVE.hits[site] - 1})
+    return fault

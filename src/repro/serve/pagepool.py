@@ -45,6 +45,7 @@ import dataclasses
 from collections import deque
 from typing import Iterable, Sequence
 
+from repro.obs import trace
 from repro.serve import faults
 
 NULL_PAGE = 0
@@ -141,6 +142,9 @@ class PagePool:
             self._ref[pid] = 1
         self.stats.allocated += n
         self.stats.peak_in_use = max(self.stats.peak_in_use, self.in_use)
+        rec = trace.active()
+        if rec is not None and n:
+            rec.instant("pool.alloc", cat="pool", args={"n": n, "shard": shard})
         return ids
 
     def share(self, page_ids: list[int]) -> None:
@@ -150,6 +154,9 @@ class PagePool:
                 raise ValueError(f"share of unreferenced page {pid}")
             self._ref[pid] += 1
         self.stats.shared += len(page_ids)
+        rec = trace.active()
+        if rec is not None and page_ids:
+            rec.instant("pool.share", cat="pool", args={"n": len(page_ids)})
 
     def release(self, page_ids: list[int]) -> list[int]:
         """Drop one reference per page; returns the ids that hit
@@ -165,6 +172,10 @@ class PagePool:
                 self._free[self.shard_of(pid)].append(pid)
                 freed.append(pid)
         self.stats.freed += len(freed)
+        rec = trace.active()
+        if rec is not None and page_ids:
+            rec.instant("pool.release", cat="pool",
+                        args={"n": len(page_ids), "freed": len(freed)})
         return freed
 
     def cow(self, page_id: int, shard: int | None = None) -> tuple[int, bool] | None:
@@ -190,6 +201,11 @@ class PagePool:
             return None
         self.release([page_id])
         self.stats.cow_copies += 1
+        rec = trace.active()
+        if rec is not None:
+            rec.instant("pool.cow", cat="pool",
+                        args={"page": page_id, "new_page": granted[0],
+                              "shard": self.shard_of(granted[0])})
         return granted[0], True
 
     # ------------------------------------------------------------------

@@ -46,6 +46,7 @@ from __future__ import annotations
 import heapq
 from typing import Iterable, Sequence
 
+from repro.obs import trace
 from repro.serve.pagepool import PagePool
 
 
@@ -124,6 +125,12 @@ class PrefixCache:
         matched = len(out) * self.page_size
         self.hit_tokens += matched
         self.miss_tokens += len(tokens) - matched
+        rec = trace.active()
+        if rec is not None:
+            rec.instant("prefix.match", cat="prefix",
+                        args={"pages": len(out), "hit_tokens": matched,
+                              "miss_tokens": len(tokens) - matched,
+                              "shard": shard})
         return out, matched
 
     def unmatch(self, page_ids: list[int], n_tokens: int) -> None:
@@ -136,6 +143,11 @@ class PrefixCache:
         matched = len(page_ids) * self.page_size
         self.hit_tokens -= matched
         self.miss_tokens -= n_tokens - matched
+        rec = trace.active()
+        if rec is not None:
+            rec.instant("prefix.unmatch", cat="prefix",
+                        args={"pages": len(page_ids), "hit_tokens": matched,
+                              "miss_tokens": n_tokens - matched})
 
     # ------------------------------------------------------------------
     def remote_continuation(
@@ -171,6 +183,11 @@ class PrefixCache:
             bp = len(nodes) * self.page_size
             self.hit_tokens += bp
             self.miss_tokens -= bp
+            rec = trace.active()
+            if rec is not None:
+                rec.instant("prefix.commit_broadcast", cat="prefix",
+                            args={"pages": len(nodes), "tokens": bp,
+                                  "shard": shard})
 
     # ------------------------------------------------------------------
     def insert(
@@ -195,6 +212,11 @@ class PrefixCache:
             node = child
         if node is not self.root:
             self._touch(node)
+        if new:
+            rec = trace.active()
+            if rec is not None:
+                rec.instant("prefix.insert", cat="prefix",
+                            args={"pages": new, "shard": shard})
         return new
 
     # ------------------------------------------------------------------
@@ -329,4 +351,10 @@ class PrefixCache:
                 if ((shard is None or s2 == shard)
                         and self._evictable(parent, s2)):
                     heapq.heappush(heap, (parent.tick, id(parent), s2, parent))
+        if freed:
+            rec = trace.active()
+            if rec is not None:
+                rec.instant("prefix.evict", cat="prefix",
+                            args={"pages": freed,
+                                  "shard": -1 if shard is None else shard})
         return freed

@@ -23,6 +23,7 @@ import dataclasses
 import math
 from typing import Sequence
 
+from repro.obs import trace
 from repro.serve import faults
 from repro.serve.pagepool import PagePool
 from repro.serve.prefix import PrefixCache
@@ -95,6 +96,11 @@ class Scheduler:
             return False  # injected reclamation failure: nothing evicted
         if self.prefix is None or self.prefix.evictable_pages(shard) < deficit:
             return False
+        rec = trace.active()
+        if rec is not None:
+            rec.instant("sched.evict", cat="sched",
+                        args={"deficit": deficit,
+                              "shard": -1 if shard is None else shard})
         self.prefix.evict(deficit, shard)
         return True
 

@@ -52,6 +52,7 @@ import time
 
 import jax.numpy as jnp
 
+from repro.obs import trace
 from repro.serve import faults
 from repro.serve.config import ServeConfig
 from repro.serve.engine import PagedEngine, Request, bucket_len
@@ -213,6 +214,13 @@ class ServeLoop:
             )
             self._by_rid[rid] = sreq
             self.metrics.record_arrival(rid, t)
+            rec = trace.active()
+            if rec is not None:
+                # one async span per request, QUEUED -> terminal, closed
+                # by the emit worker — the trace twin of metrics.Timeline
+                rec.async_begin("request", rid, cat="serve", ts=t,
+                                args={"prompt": len(sreq.engine_req.prompt),
+                                      "max_new": max_new})
             reason = self._never_fits(sreq.engine_req)
             if reason is None and self.queue_cap is not None \
                     and len(self._queue) >= self.queue_cap:
@@ -290,9 +298,23 @@ class ServeLoop:
                         self._queue.pop(0)
                     self._head_stalls = 0
                     head.state = Lifecycle.DECODING
+                    # one clock read serves as both the prefill-span end
+                    # and the first token's emit timestamp, so the trace
+                    # decomposition (queue_wait + prefill) telescopes to
+                    # exactly the TTFT metrics.py records
+                    t_done = self.clock()
                     self.metrics.record_admitted(head.rid, t_start,
                                                  overlapped=overlapped)
-                    self._flush_tokens_locked(head, self.clock())
+                    self._flush_tokens_locked(head, t_done)
+                    rec = trace.active()
+                    if rec is not None:
+                        rec.complete("request.queue_wait", head.arrival_t,
+                                     t_start, cat="serve",
+                                     args={"rid": head.rid})
+                        rec.complete("request.prefill", t_start, t_done,
+                                     cat="serve",
+                                     args={"rid": head.rid,
+                                           "overlapped": overlapped})
                     self._work.notify_all()
                     continue
                 # typed backpressure: the head stays at the front (FIFO —
@@ -301,6 +323,12 @@ class ServeLoop:
                 # can be met, not before
                 head.state = Lifecycle.QUEUED
                 self.metrics.record_rejected(res.reason)
+                rec = trace.active()
+                if rec is not None:
+                    rec.instant("admission.backpressure", cat="serve",
+                                args={"rid": head.rid, "reason": res.reason,
+                                      "retry_after_pages":
+                                          res.retry_after_pages})
                 if not eng.slots and not eng._requeue:
                     # nothing running will ever free pages; without an
                     # armed fault plan this is permanent (mirrors
@@ -346,9 +374,16 @@ class ServeLoop:
                     self._work.wait(timeout=self._retry_s)
                     continue
                 n_live = len(eng.slots)
+                rec = trace.active()
+                t_tick = self.clock() if rec is not None else 0.0
                 finished = eng.step()
                 t = self.clock()
                 self.metrics.record_tick(n_live)
+                if rec is not None:
+                    rec.complete("decode.tick", t_tick, t, cat="serve",
+                                 args={"n_slots": n_live,
+                                       "finished": len(finished)})
+                    rec.counter("live_slots", len(eng.slots), ts=t)
                 for req in [st.req for st in eng.slots.values()] + finished:
                     self._flush_tokens_locked(self._by_rid[req.rid], t)
                 for req in finished:
@@ -370,12 +405,22 @@ class ServeLoop:
             if kind == "tok":
                 _, sreq, tok, t = item
                 self.metrics.record_token(sreq.rid, t)
+                rec = trace.active()
+                if rec is not None:
+                    now = self.clock()
+                    rec.instant("token.emit", cat="serve", ts=now,
+                                args={"rid": sreq.rid,
+                                      "lag_ms": (now - t) * 1e3})
                 if self.detokenize is not None:
                     sreq.text += self.detokenize(tok)
                 sreq.stream._push(tok)
             else:  # "close"
                 _, sreq = item
                 self.metrics.record_done(sreq.rid, sreq.state.name)
+                rec = trace.active()
+                if rec is not None:
+                    rec.async_end("request", sreq.rid, cat="serve",
+                                  args={"state": sreq.state.name})
                 sreq.stream._close()
 
     # -- warmup (cached per-bucket prefill executables) ----------------------
@@ -387,6 +432,8 @@ class ServeLoop:
         the number of programs compiled."""
         eng = self.engine
         n = 0
+        rec = trace.active()
+        t0 = self.clock() if rec is not None else 0.0
         with self._work:
             for ln in prompt_lens:
                 b = bucket_len(ln, eng.prompt_bucket)
@@ -424,6 +471,9 @@ class ServeLoop:
                 self._warm_decode = True
                 self.metrics.record_bucket_compile()
                 n += 1
+        if rec is not None and n:
+            rec.complete("compile.warmup", t0, self.clock(), cat="serve",
+                         args={"programs": n})
         return n
 
     def warmup_for_trace(self, trace) -> int:

@@ -200,14 +200,23 @@ def test_serve_config_argparse_roundtrip():
         ap.parse_args(["--mcast-mode", "bogus"])  # choices from the field
 
 
-def test_legacy_kwargs_warn_once_then_stay_quiet(small):
+def test_legacy_kwargs_warn_once_per_call_site(small):
     cfg, params = small
-    serve_config._LEGACY_WARNED = False  # earlier tests may have tripped it
+    serve_config._LEGACY_WARNED.clear()  # earlier tests may have tripped it
+
+    def mk():  # one fixed call site, hit repeatedly
+        return PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=16)
+
+    with pytest.warns(DeprecationWarning, match="config=ServeConfig"):
+        mk()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # same call site again: no warning
+        mk()
+    # a *different* call site warns afresh — a long-lived session that
+    # grows a new legacy caller still hears about it
     with pytest.warns(DeprecationWarning, match="config=ServeConfig"):
         PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=16)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")  # second legacy call: no warning
-        PagedEngine(cfg, params, max_batch=2, cache_len=64, page_size=16)
+    assert len(serve_config._LEGACY_WARNED) == 2  # (module, lineno) keyed
     with pytest.raises(TypeError):
         PagedEngine(cfg, params, max_batch=2,
                     config=ServeConfig(max_slots=2))  # both styles at once
@@ -443,6 +452,30 @@ def test_snapshot_schema_includes_broadcast_surface(small):
         validate_snapshot({**snap, "mcast_mode": 3})
     with pytest.raises(ValueError):
         validate_snapshot({**snap, "made_up_metric": 1})
+
+
+@pytest.mark.parametrize("num_shards", [1, 4])
+def test_stats_delta_shard_gauges_round_trip(small, num_shards):
+    """Regression: the whole ``shard{s}_*`` family must be treated as
+    gauges — a second quiet window reports each shard's *current*
+    occupancy, not a (zero) counter difference, for S=1 and S=4 alike."""
+    cfg, params = small
+    eng = PagedEngine(cfg, params, config=ServeConfig(
+        max_slots=2, cache_len=64, page_size=8, num_shards=num_shards,
+        pages_per_shard=8 if num_shards > 1 else None))
+    eng.run(_mk_requests(cfg, shared_prefix=16, n=4))
+    d1 = eng.stats_delta()
+    assert d1["pool_allocated"] > 0
+    # quiet second window: counters zero, every gauge = current value
+    d2 = eng.stats_delta()
+    now = eng.flat_stats()
+    assert d2["pool_allocated"] == 0 and d2["pool_freed"] == 0
+    for s in range(num_shards):
+        assert d2[f"shard{s}_free_pages"] == now[f"shard{s}_free_pages"]
+        assert d2[f"shard{s}_in_use"] == now[f"shard{s}_in_use"]
+        assert (d2[f"shard{s}_free_pages"] + d2[f"shard{s}_in_use"]
+                == eng.pool.pages_per_shard)
+    assert d2["free_pages"] == eng.pool.free_pages
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,337 @@
+"""Tracing/profiling layer tests: recorder semantics (ring buffer,
+thread metadata, zero-cost disabled path), export schema validation,
+span nesting against the engine/loop worker structure, and the offline
+analyzer's exact cross-checks against the live engine/pool/prefix
+counters and ``dist/mcast.bytes_model``."""
+import json
+import tracemalloc
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.dist import mcast
+from repro.models import lm
+from repro.obs import analyze as obs_analyze
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
+from repro.serve import (
+    Lifecycle,
+    LoadGen,
+    PagedEngine,
+    Request,
+    ServeConfig,
+    ServeLoop,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = lm.init(cfg, KEY)
+    return cfg, params
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_recorder():
+    assert obs_trace.active() is None, "a test leaked an armed recorder"
+    yield
+    obs_trace.stop()  # idempotent; keeps one failure from cascading
+
+
+def _mk_requests(cfg, *, shared_prefix=0, n=4, max_new=5, seed=7):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    prefix = list(rng.integers(0, cfg.vocab, size=shared_prefix))
+    return [
+        Request(rid=i,
+                prompt=prefix + list(rng.integers(0, cfg.vocab, size=3 + i)),
+                max_new=max_new)
+        for i in range(n)
+    ]
+
+
+def _spans(events, name):
+    return [e for e in events if e["ph"] == "X" and e["name"] == name]
+
+
+def _contained(inner, outer) -> bool:
+    return (inner["ts"] >= outer["ts"] - 1e-6
+            and inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# recorder semantics
+# ---------------------------------------------------------------------------
+
+
+def test_ring_buffer_evicts_oldest_first():
+    rec = obs_trace.Recorder(max_events=4)
+    for i in range(6):
+        rec.instant(f"e{i}", cat="t")
+    # 7 pushes total (thread_name metadata + 6 instants) into 4 slots:
+    # the metadata event and e0/e1 fall off the front, oldest first
+    assert [e["name"] for e in rec.events()] == ["e2", "e3", "e4", "e5"]
+    assert rec.n_dropped == 3
+    rec.clear()
+    assert len(rec) == 0 and rec.n_dropped == 0
+
+
+def test_event_forms_and_thread_metadata():
+    rec = obs_trace.Recorder(meta={"who": "test"})
+    t0 = rec.now()
+    rec.complete("work", t0, cat="c", args={"k": 1})
+    rec.instant("tick", cat="c")
+    rec.counter("depth", 3, cat="c")
+    rec.async_begin("req", 7, cat="c")
+    rec.async_end("req", 7, cat="c")
+    evs = rec.events()
+    assert [e["ph"] for e in evs] == ["M", "X", "i", "C", "b", "e"]
+    assert evs[0]["args"]["name"]  # thread name captured
+    assert evs[1]["dur"] >= 0 and evs[1]["args"] == {"k": 1}
+    assert evs[3]["args"]["value"] == 3
+    assert evs[4]["id"] == evs[5]["id"] == "7"
+    trace = obs_export.validate_trace(obs_export.to_chrome(rec))
+    assert trace["metadata"]["who"] == "test"
+    assert trace["metadata"]["schema_version"] == obs_export.TRACE_SCHEMA_VERSION
+
+
+def test_counter_track_is_time_ordered():
+    rec = obs_trace.Recorder()
+    for v in (1, 2, 3, 5, 8):
+        rec.counter("fib", v)
+    samples = [e for e in rec.events() if e["ph"] == "C"]
+    ts = [e["ts"] for e in samples]
+    assert ts == sorted(ts)  # monotone clock -> monotone track
+    assert [e["args"]["value"] for e in samples] == [1, 2, 3, 5, 8]
+
+
+def test_start_twice_raises_and_tracing_scopes():
+    with obs_trace.tracing() as rec:
+        assert obs_trace.active() is rec
+        with pytest.raises(RuntimeError):
+            obs_trace.start()
+    assert obs_trace.active() is None
+
+
+def test_export_roundtrips_both_formats(tmp_path):
+    rec = obs_trace.Recorder(meta={"n": 1})
+    rec.instant("a", cat="t", args={"x": 2})
+    rec.counter("c", 1.5)
+    for name in ("t.json", "t.jsonl"):
+        path = str(tmp_path / name)
+        written = obs_export.write(rec, path)
+        loaded = obs_export.load(path)
+        assert loaded["traceEvents"] == written["traceEvents"]
+        assert loaded["metadata"]["n"] == 1
+        obs_export.validate_trace(loaded)
+
+
+def test_validate_trace_rejects_malformed():
+    ok = {"name": "x", "ph": "i", "ts": 0.0, "pid": 1, "tid": 1, "s": "t"}
+    obs_export.validate_trace({"traceEvents": [ok]})
+    bad = [
+        {**ok, "ph": "Z"},                                  # unknown phase
+        {**ok, "ph": "X"},                                  # X without dur
+        {**ok, "ph": "X", "dur": -1.0},                     # negative dur
+        {**ok, "ph": "b"},                                  # async without id
+        {**ok, "ph": "C", "args": {"value": "much"}},       # non-numeric counter
+        {**ok, "args": [1, 2]},                             # args not a dict
+        {k: v for k, v in ok.items() if k != "ts"},         # missing required
+    ]
+    for ev in bad:
+        with pytest.raises(ValueError):
+            obs_export.validate_trace({"traceEvents": [ev]})
+    with pytest.raises(ValueError):
+        obs_export.validate_trace([ok])  # no envelope
+
+
+def test_validate_report_rejects_malformed():
+    report = obs_analyze.analyze({"traceEvents": []})
+    obs_analyze.validate_report(report)
+    with pytest.raises(ValueError, match="missing"):
+        obs_analyze.validate_report(
+            {k: v for k, v in report.items() if k != "decode_ticks"})
+    with pytest.raises(ValueError, match="unknown key"):
+        obs_analyze.validate_report({**report, "surprise": 1})
+    with pytest.raises(ValueError, match="wrong type"):
+        obs_analyze.validate_report({**report, "decode_ticks": True})
+    with pytest.raises(ValueError, match="not finite"):
+        obs_analyze.validate_report(
+            {**report, "broadcast_savings_frac": float("nan")})
+
+
+# ---------------------------------------------------------------------------
+# the disabled path: zero events, zero allocations, identical tokens
+# ---------------------------------------------------------------------------
+
+
+def test_tracing_off_records_nothing_and_allocates_nothing(small):
+    cfg, params = small
+    eng = PagedEngine(cfg, params, config=ServeConfig(
+        max_slots=2, cache_len=64, page_size=16))
+    reqs = _mk_requests(cfg, n=2, max_new=3)
+    eng.run([reqs[0]])  # compile outside the measured window
+    assert obs_trace.active() is None
+    tracemalloc.start()
+    try:
+        eng.run([reqs[1]])
+        snap = tracemalloc.take_snapshot()
+    finally:
+        tracemalloc.stop()
+    ours = snap.filter_traces(
+        [tracemalloc.Filter(True, obs_trace.__file__)]).statistics("lineno")
+    assert ours == []  # the disabled path is one global read — no allocations
+
+
+def test_tracing_onoff_token_streams_identical(small):
+    cfg, params = small
+    mk = lambda: PagedEngine(cfg, params, config=ServeConfig(  # noqa: E731
+        max_slots=2, cache_len=64, page_size=8))
+    reqs = _mk_requests(cfg, shared_prefix=16, n=3, max_new=4)
+    plain = {r.rid: r.out for r in mk().run(_mk_requests(
+        cfg, shared_prefix=16, n=3, max_new=4))}
+    with obs_trace.tracing() as rec:
+        traced = {r.rid: r.out for r in mk().run(reqs)}
+    assert traced == plain  # observation never perturbs the computation
+    assert len(rec) > 0
+
+
+# ---------------------------------------------------------------------------
+# instrumentation: nesting + exact counter cross-checks (sync engine)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_trace_cross_checks_live_counters(small):
+    cfg, params = small
+    eng = PagedEngine(cfg, params, config=ServeConfig(
+        max_slots=2, cache_len=64, page_size=8))
+    reqs = _mk_requests(cfg, shared_prefix=16, n=4, max_new=4)
+    with obs_trace.tracing() as rec:
+        done = eng.run(reqs)
+    assert len(done) == 4
+    events = rec.events()
+    report = obs_analyze.analyze(obs_export.to_chrome(rec))
+
+    # every engine kernel-call span is inside an engine.step or
+    # engine.admit span on the same thread (the worker structure)
+    steps = _spans(events, "engine.step")
+    admits = _spans(events, "engine.admit")
+    decodes = _spans(events, "engine.decode")
+    assert steps and admits and decodes
+    for d in decodes:
+        assert any(_contained(d, s) for s in steps if s["tid"] == d["tid"])
+    prefills = (_spans(events, "engine.cold_prefill")
+                + _spans(events, "engine.suffix_prefill"))
+    assert prefills
+    for p in prefills:
+        assert any(_contained(p, a) for a in admits if a["tid"] == p["tid"])
+
+    # kernel-call counts: trace == the engine's own per-name counter
+    for name, calls in eng.kernel_calls.items():
+        assert report[f"kernel_calls_{name}"] == calls
+    assert report["kernel_calls_total"] == sum(eng.kernel_calls.values())
+
+    # pool / prefix accounting: trace sums == live counters, exactly
+    assert report["pool_pages_allocated"] == eng.pool.stats.allocated
+    assert report["pool_pages_freed"] == eng.pool.stats.freed
+    assert report["pool_pages_shared"] == eng.pool.stats.shared
+    assert report["pool_cow_copies"] == eng.pool.stats.cow_copies
+    assert report["prefix_hit_tokens"] == eng.prefix.hit_tokens
+    assert report["prefix_miss_tokens"] == eng.prefix.miss_tokens
+    assert report["prefix_pages_multicast"] > 0  # the shared prefix hit
+    assert report["kernel_calls_decode"] == len(decodes)
+    eng.check()
+
+
+def test_sharded_broadcast_bytes_match_bytes_model(small):
+    cfg, params = small
+    eng = PagedEngine(cfg, params, config=ServeConfig(
+        max_slots=2, cache_len=64, page_size=8, num_shards=4,
+        pages_per_shard=8, mcast_mode="sw_tree"))
+    reqs = _mk_requests(cfg, shared_prefix=32, n=4, max_new=4)
+    with obs_trace.tracing() as rec:
+        eng.run(reqs)
+    report = obs_analyze.analyze(obs_export.to_chrome(rec))
+    st = eng.stats()
+    assert report["broadcast_chains"] == st["broadcast_chains"] > 0
+    assert report["broadcast_pages"] == st["broadcast_pages"]
+    assert report["broadcast_payload_bytes"] == st["broadcast_payload_bytes"]
+    assert report["broadcast_fabric_bytes"] == st["broadcast_fabric_bytes"]
+    # fabric bytes follow dist/mcast's per-device model for the mode...
+    mult = mcast.bytes_model(1, 4, per_device=True)["sw_tree"]
+    assert report["broadcast_fabric_bytes"] == \
+        report["broadcast_payload_bytes"] * mult
+    assert report["broadcast_fabric_bytes_sw_tree"] == \
+        report["broadcast_fabric_bytes"]
+    # ...and beat the all-unicast baseline the analyzer reconstructs
+    uni = mcast.bytes_model(1, 4, per_device=True)["unicast"]
+    assert report["broadcast_unicast_bytes"] == \
+        report["broadcast_payload_bytes"] * uni
+    assert 0.0 < report["broadcast_savings_frac"] < 1.0
+    assert report["prefix_pages_broadcast"] > 0
+    eng.check()
+
+
+# ---------------------------------------------------------------------------
+# the async loop: request spans + TTFT decomposition vs metrics
+# ---------------------------------------------------------------------------
+
+
+def test_loop_trace_ttft_decomposition_matches_metrics(small):
+    cfg, params = small
+    trace_reqs = LoadGen(seed=3, qps=30.0, duration=0.3, vocab=cfg.vocab,
+                         max_new=6, shared_prefix_len=24,
+                         shared_frac=0.5).trace()
+    eng = PagedEngine(cfg, params, config=ServeConfig(
+        max_slots=3, cache_len=128, page_size=16, pages=64))
+    with obs_trace.tracing() as rec:
+        loop = ServeLoop(eng)
+        results = loop.run_trace(trace_reqs)
+    assert {r.state for r in results.values()} == {Lifecycle.DRAINED}
+    snap = loop.snapshot()
+    events = rec.events()
+    report = obs_analyze.analyze(obs_export.to_chrome(rec))
+
+    # request lifecycle: one async b/e pair per submitted request
+    assert report["requests_submitted"] == len(trace_reqs)
+    assert report["requests_finished"] == len(trace_reqs)
+    assert report["tokens_emitted"] == snap["tokens_out"]
+    assert report["decode_ticks"] == snap["decode_ticks"]
+
+    # nesting: every engine.step span sits inside a decode.tick span
+    ticks = _spans(events, "decode.tick")
+    for s in _spans(events, "engine.step"):
+        assert any(_contained(s, t) for t in ticks if t["tid"] == s["tid"])
+
+    # TTFT decomposition: queue_wait + prefill from span durations must
+    # reproduce the metrics histograms (same values, same histogram)
+    assert abs(report["ttft_decomposed_p50_ms"] - snap["ttft_p50_ms"]) < 1.0
+    assert abs(report["queue_wait_p50_ms"] - snap["queue_wait_p50_ms"]) < 1.0
+    # live_slots counter track exists and never exceeds max_slots
+    slots = [e["args"]["value"] for e in events
+             if e["ph"] == "C" and e["name"] == "live_slots"]
+    assert slots and max(slots) <= 3
+
+
+# ---------------------------------------------------------------------------
+# analyzer CLI
+# ---------------------------------------------------------------------------
+
+
+def test_analyze_cli_prints_table_and_writes_json(small, tmp_path, capsys):
+    cfg, params = small
+    eng = PagedEngine(cfg, params, config=ServeConfig(
+        max_slots=2, cache_len=64, page_size=8))
+    with obs_trace.tracing() as rec:
+        eng.run(_mk_requests(cfg, shared_prefix=16, n=3, max_new=3))
+    tpath, jpath = str(tmp_path / "t.json"), str(tmp_path / "r.json")
+    obs_export.write(rec, tpath)
+    assert obs_analyze.main([tpath, "--json", jpath]) == 0
+    out = capsys.readouterr().out
+    assert "prefix_pages_multicast" in out and "kernel_calls_total" in out
+    written = json.load(open(jpath))
+    assert written == obs_analyze.analyze(tpath)
