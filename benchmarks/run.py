@@ -48,7 +48,8 @@ SOURCES = (
     ("benchmarks.bench_collective_bytes", ("fig3b_tpu_",), False, True),
     ("benchmarks.bench_kernels", ("kernel_",), True, False),
     ("benchmarks.bench_serve", ("kernel_serve_", "kernel_paged_"), True, False),
-    ("benchmarks.bench_serve_load", ("kernel_serve_load_",), True, False),
+    ("benchmarks.bench_serve_load",
+     ("kernel_serve_load_", "kernel_serve_spec_"), True, False),
 )
 
 

@@ -1,4 +1,16 @@
-"""Architecture registry: ``get_config(arch_id)`` -> ModelConfig."""
+"""Architecture registry: ``get_config(arch_id)`` -> ModelConfig.
+
+Also the declarative draft-pairing API for speculative decoding: a
+config module may export ``DRAFT = "<arch>"`` naming the small
+same-tokenizer family member that proposes tokens for it.
+:func:`draft_for` reads that metadata; :func:`validate_draft_pair`
+checks the pair is actually compatible (identical vocab — the
+tokenizer-compat proxy — a draft trunk no wider than the target's, and
+a draft the paged serving stack can run) and raises the typed
+:class:`DraftPairingError` otherwise.  ``ServeConfig`` construction and
+``PagedEngine`` both route through it, so an incompatible pair fails
+loudly at config time instead of emitting garbage tokens.
+"""
 from __future__ import annotations
 
 import importlib
@@ -7,6 +19,7 @@ ARCHS: tuple[str, ...] = (
     "recurrentgemma-2b",
     "deepseek-7b",
     "qwen1.5-0.5b",
+    "qwen1.5-1.8b",
     "command-r-35b",
     "gemma2-9b",
     "whisper-medium",
@@ -19,10 +32,69 @@ ARCHS: tuple[str, ...] = (
 _MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
 
 
+class DraftPairingError(ValueError):
+    """A (target, draft) speculative-decoding pair failed validation."""
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
 def get_config(arch: str, *, reduced: bool = False):
     """Load an architecture config; ``reduced=True`` returns the small
     same-family config used by the CPU smoke tests."""
-    if arch not in _MODULES:
-        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
-    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    mod = _module(arch)
     return mod.reduced_config() if reduced else mod.config()
+
+
+def draft_for(arch: str) -> str | None:
+    """The registered draft architecture for ``arch`` (the config
+    module's ``DRAFT`` metadata), or None when the registry pairs no
+    draft with it."""
+    return getattr(_module(arch), "DRAFT", None)
+
+
+def _as_config(arch_or_cfg, *, reduced: bool):
+    if isinstance(arch_or_cfg, str):
+        return get_config(arch_or_cfg, reduced=reduced)
+    return arch_or_cfg
+
+
+def validate_draft_pair(target, draft, *, reduced: bool = False):
+    """Check ``draft`` can propose tokens for ``target``.
+
+    Both may be arch names (resolved through the registry, honouring
+    ``reduced``) or already-built ``ModelConfig``s.  Returns the
+    ``(target_cfg, draft_cfg)`` pair; raises :class:`DraftPairingError`
+    with the first violated constraint:
+
+    * identical vocab — proposals are token ids, so target and draft
+      must share a tokenizer;
+    * draft ``d_model`` <= target ``d_model`` — a "draft" wider than
+      its target is a config mix-up, not an acceleration;
+    * draft must be servable by the paged stack (attention-only, global
+      windows, non-MoE) — it runs through the same bucketed prefill and
+      dense decode paths the engine uses.
+    """
+    tcfg = _as_config(target, reduced=reduced)
+    dcfg = _as_config(draft, reduced=reduced)
+    if tcfg.vocab != dcfg.vocab:
+        raise DraftPairingError(
+            f"draft {dcfg.name!r} (vocab {dcfg.vocab}) is not "
+            f"tokenizer-compatible with target {tcfg.name!r} (vocab "
+            f"{tcfg.vocab}): speculative proposals are token ids")
+    if dcfg.d_model > tcfg.d_model:
+        raise DraftPairingError(
+            f"draft {dcfg.name!r} (d_model {dcfg.d_model}) is wider than "
+            f"target {tcfg.name!r} (d_model {tcfg.d_model}); pick a "
+            f"smaller draft")
+    for i, bd in enumerate(dcfg.layer_defs):
+        if bd.mixer != "attn" or bd.window is not None or bd.ff == "moe":
+            raise DraftPairingError(
+                f"draft {dcfg.name!r} layer {i} ({bd.mixer}, "
+                f"window={bd.window}, ff={bd.ff}) is not servable by the "
+                f"paged stack (needs attention-only, global-window, "
+                f"non-MoE blocks)")
+    return tcfg, dcfg

@@ -56,6 +56,7 @@ import numpy as np
 
 from repro import kernels
 from repro.configs import ARCHS, get_config
+from repro.configs.registry import draft_for
 from repro.models import lm
 from repro.serve import (  # noqa: F401 (Request re-export)
     Fault,
@@ -72,6 +73,7 @@ from repro.serve import (  # noqa: F401 (Request re-export)
     validate_snapshot,
 )
 from repro.serve import config as serve_config
+from repro.serve.sampling import Sampler, get_sampler
 
 
 class Server:
@@ -81,11 +83,12 @@ class Server:
     global-attention models."""
 
     def __init__(self, cfg, params, *, max_batch: int = 4, cache_len: int = 256,
-                 prompt_bucket: int = 16):
+                 prompt_bucket: int = 16, sampler: Sampler | None = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.cache_len = cache_len
+        self.sampler = sampler if sampler is not None else get_sampler("greedy")
         self.caches = lm.init_cache(cfg, max_batch, cache_len)
         self.active: dict[int, Request] = {}  # slot -> request
         self.pos = np.zeros(max_batch, np.int32)
@@ -135,7 +138,7 @@ class Server:
         )
         self.active[slot] = req
         self.pos[slot] = n
-        self.last_tok[slot] = int(jnp.argmax(logits[0, -1]))
+        self.last_tok[slot] = int(self.sampler.select(logits)[0, -1])
         req.out.append(int(self.last_tok[slot]))
         return True
 
@@ -151,7 +154,7 @@ class Server:
             # ragged continuous batching: every slot decodes at ITS position
             idx = jnp.asarray(self.pos, jnp.int32)
             logits, self.caches = self._decode(self.params, self.caches, toks, idx)
-            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            nxt = self.sampler.select(logits)[:, -1]
             finished = []
             for slot, req in list(self.active.items()):
                 self.pos[slot] += 1
@@ -226,6 +229,17 @@ def main() -> None:
     if args.server and args.kv != "paged":
         ap.error("--server requires --kv paged (the ServeLoop is built on "
                  "the paged engine's typed admission/slot machinery)")
+    if getattr(args, "draft_model", None) == "auto":
+        # resolve the registry pairing here, before ServeConfig validation
+        # (the config layer is jax-free and never sees "auto")
+        paired = draft_for(args.arch)
+        if paired is None:
+            ap.error(f"--draft-model auto: registry pairs no draft for "
+                     f"--arch {args.arch}")
+        args.draft_model = paired
+    if getattr(args, "spec_k", 0) and args.kv != "paged":
+        ap.error("--spec-k requires --kv paged (speculative verify-accept "
+                 "runs on the paged engine's COW page machinery)")
     if args.kernel_policy:
         kernels.set_policy(args.kernel_policy)
     serve_cfg = serve_config.from_args(
@@ -246,6 +260,7 @@ def main() -> None:
 
 def _drive(args, cfg, serve_cfg: ServeConfig) -> None:
     params = lm.init(cfg, jax.random.PRNGKey(serve_cfg.seed))
+    sampler = get_sampler(serve_cfg.sampler)
     if args.kv == "paged":
         mesh = None
         if args.mesh:
@@ -253,9 +268,19 @@ def _drive(args, cfg, serve_cfg: ServeConfig) -> None:
 
             mesh = make_serve_mesh(serve_cfg.num_shards,
                                    axis=serve_cfg.mesh_axis)
-        server = PagedEngine(cfg, params, config=serve_cfg, mesh=mesh)
+        draft = None
+        if serve_cfg.draft_model and serve_cfg.draft_model != "ngram":
+            # model draft: second (small) param set through the same
+            # KernelOp dispatch; init shares the run seed so the whole
+            # spec configuration replays from the command line
+            dcfg = get_config(serve_cfg.draft_model, reduced=args.reduced)
+            dparams = lm.init(dcfg, jax.random.PRNGKey(serve_cfg.seed))
+            draft = (dcfg, dparams)
+        server = PagedEngine(cfg, params, config=serve_cfg, mesh=mesh,
+                             draft=draft, sampler=sampler)
     else:
-        server = Server(cfg, params, max_batch=serve_cfg.max_slots)
+        server = Server(cfg, params, max_batch=serve_cfg.max_slots,
+                        sampler=sampler)
 
     plan = serve_cfg.fault_plan()
 

@@ -246,6 +246,27 @@ def mask_cache_after(caches, length):
     return jax.tree.map(fix, caches, is_leaf=lambda x: isinstance(x, _DENSE_CACHES))
 
 
+def mask_cache_rows_after(caches, lengths):
+    """Per-row :func:`mask_cache_after`: ``lengths`` is (batch,) and row
+    ``b``'s cache positions at or past ``lengths[b]`` are marked empty.
+
+    The speculative-decoding draft cache needs this after every
+    verify-accept round: the draft wrote K/V for all k proposed tokens,
+    but only the accepted prefix is real history — rejected rows must
+    become unattendable without touching the other batch rows."""
+    lengths = jnp.asarray(lengths, jnp.int32)
+
+    def fix(c):
+        if isinstance(c, _DENSE_CACHES):
+            # pos is (..., batch, slots); (batch, 1) broadcasts from the
+            # right regardless of leading stage-stack dims
+            return c._replace(
+                pos=jnp.where(c.pos >= lengths[:, None], -1, c.pos))
+        return c
+
+    return jax.tree.map(fix, caches, is_leaf=lambda x: isinstance(x, _DENSE_CACHES))
+
+
 def prefill_to_pages(dense_caches, paged_caches, block_table, length):
     """Scatter a batch-1 dense prefill cache into the page pools.
 

@@ -91,6 +91,13 @@ REPORT_SCHEMA = {
     "sched_evictions": int,
     "admission_rejections": int,
     "faults_fired_total": int,
+    # speculative decoding (spec.verify instants from the engine)
+    "spec_rounds": int,
+    "spec_drafted": int,
+    "spec_accepted": int,
+    "spec_committed": int,
+    "spec_rollback_pages": int,
+    "spec_accept_rate": _NUM,
     # request lifecycle
     "requests_submitted": int,
     "requests_finished": int,
@@ -277,6 +284,12 @@ def analyze(trace: Union[dict, list, str]) -> dict:
                 n["rejections"] += 1
             elif name == "kernel.fallback":
                 n["fallbacks"] += 1
+            elif name == "spec.verify":
+                n["spec_rounds"] += 1
+                n["spec_drafted"] += int(args.get("drafted", 0))
+                n["spec_accepted"] += int(args.get("accepted", 0))
+                n["spec_committed"] += int(args.get("committed", 0))
+                n["spec_rollback_pages"] += int(args.get("rollback_pages", 0))
             elif name == "token.emit":
                 n["tokens"] += 1
                 emit_lags.append(float(args.get("lag_ms", 0.0)) / 1e3)
@@ -333,6 +346,14 @@ def analyze(trace: Union[dict, list, str]) -> dict:
         "sched_evictions": int(n["sched_evict"]),
         "admission_rejections": int(n["rejections"]),
         "faults_fired_total": sum(faults.values()),
+        "spec_rounds": int(n["spec_rounds"]),
+        "spec_drafted": int(n["spec_drafted"]),
+        "spec_accepted": int(n["spec_accepted"]),
+        "spec_committed": int(n["spec_committed"]),
+        "spec_rollback_pages": int(n["spec_rollback_pages"]),
+        "spec_accept_rate":
+            n["spec_accepted"] / n["spec_drafted"] if n["spec_drafted"]
+            else 0.0,
         "requests_submitted": int(n["submitted"]),
         "requests_finished": int(n["finished"]),
         "decode_ticks": int(n["decode_ticks"]),

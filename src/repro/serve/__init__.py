@@ -16,6 +16,12 @@
                 workers, typed admission backpressure, clean drain,
 ``metrics``   — streaming latency histograms + the flat, schema-checked
                 metrics snapshot,
+``sampling``  — the typed token-selection interface (``Sampler``):
+                one decision point for admission, decode, and the
+                speculative verify-accept rule composed over it,
+``spec``      — speculative-decoding draft proposers (``ModelDraft``
+                registry pairings, ``NgramDraft`` prompt-lookup) feeding
+                the engine's one-dispatch verify step,
 ``loadgen``   — seeded Poisson arrival traces (the reproducible load
                 benchmark workload),
 ``faults``    — deterministic fault-injection plans for chaos testing,
@@ -36,6 +42,19 @@ from repro.serve.engine import (  # noqa: F401
     pad_to_bucket,
 )
 from repro.serve.faults import Fault, FaultPlan, InjectedFault  # noqa: F401
+from repro.serve.sampling import (  # noqa: F401
+    SAMPLERS,
+    GreedySampler,
+    Sampler,
+    get_sampler,
+)
+from repro.serve.spec import (  # noqa: F401
+    DraftModel,
+    ModelDraft,
+    NgramDraft,
+    SlotView,
+    make_draft,
+)
 from repro.serve.guard import (  # noqa: F401
     GuardViolation,
     PageFingerprints,

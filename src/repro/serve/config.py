@@ -33,6 +33,11 @@ from repro.serve.faults import Fault, FaultPlan
 #: doesn't pull in jax; asserted equal in tests/test_sharded_serve.py).
 MCAST_MODES = ("unicast", "sw_tree", "hw")
 
+#: token-selection rules — must match ``repro.serve.sampling.SAMPLERS``
+#: (kept literal here so importing the config doesn't pull in jax;
+#: asserted equal in tests/test_spec_decode.py).
+SAMPLERS = ("greedy",)
+
 _KV_DTYPES = ("bf16", "f32", "int8")
 
 
@@ -95,6 +100,15 @@ class ServeConfig:
                            "JSON here (.jsonl for a flat event log); the "
                            "analyzer report lands at PATH.report.json",
                            type_=str)
+    # --- sampling + speculative decoding (PR 10) ----------------------
+    sampler: str = _f("greedy", "token-selection rule (serve/sampling.py)",
+                      type_=str, choices=SAMPLERS)
+    spec_k: int = _f(0, "speculative decoding: draft tokens verified per "
+                     "decode tick (0 = off)", type_=int)
+    draft_model: str | None = _f(None, "draft proposer: a registry arch "
+                                 "name, 'ngram' (prompt-lookup), or 'auto' "
+                                 "(the target's registered pairing)",
+                                 type_=str)
 
     def __post_init__(self):
         if self.page_size < 1 or self.cache_len < self.page_size:
@@ -137,6 +151,38 @@ class ServeConfig:
                     f"pages-1 ({self.pages - 1}) must divide evenly over "
                     f"num_shards={self.num_shards} (page 0 is the shared "
                     f"null page; every shard owns an equal range)")
+        if self.sampler not in SAMPLERS:
+            raise ValueError(
+                f"unknown sampler {self.sampler!r} (have {SAMPLERS})")
+        if self.spec_k < 0:
+            raise ValueError(f"need spec_k >= 0: {self.spec_k}")
+        if self.spec_k and self.draft_model is None:
+            raise ValueError(
+                "spec_k > 0 needs a draft: pass draft_model (a registry "
+                "arch, 'ngram', or 'auto')")
+        if self.draft_model is not None:
+            if not self.spec_k:
+                raise ValueError(
+                    f"draft_model={self.draft_model!r} without spec_k > 0 "
+                    f"does nothing; set spec_k")
+            if self.draft_model == "auto":
+                raise ValueError(
+                    "draft_model='auto' must be resolved against the "
+                    "target arch before ServeConfig construction "
+                    "(configs.registry.draft_for — launch/serve.py does "
+                    "this)")
+            if self.draft_model != "ngram":
+                # typed membership check at config time; the full
+                # pairing validation (vocab / width / servability,
+                # DraftPairingError) runs against the target config at
+                # engine construction (configs.registry
+                # .validate_draft_pair via serve.spec.make_draft)
+                from repro.configs import registry
+                if self.draft_model not in registry.ARCHS:
+                    raise registry.DraftPairingError(
+                        f"unknown draft_model {self.draft_model!r}: not "
+                        f"'ngram' and not a registry arch "
+                        f"({list(registry.ARCHS)})")
         for spec in self.chaos:
             site, _, prob = spec.partition(":")
             Fault(site, prob=float(prob) if prob else 0.05)  # validates

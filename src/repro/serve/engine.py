@@ -100,7 +100,7 @@ from repro.obs import trace
 from repro.models import lm
 from repro.nn import kvquant
 from repro.nn.attention import PagedKvCache
-from repro.serve import faults, guard
+from repro.serve import faults, guard, sampling
 from repro.serve.config import ServeConfig, config_from_legacy
 from repro.serve.pagepool import PagePool
 from repro.serve.prefix import PrefixCache
@@ -179,7 +179,8 @@ class PagedEngine:
     (``lm.init_paged_cache`` enforces this)."""
 
     def __init__(self, cfg, params, *, config: ServeConfig | None = None,
-                 mesh=None, **legacy):
+                 mesh=None, draft=None, sampler: sampling.Sampler | None = None,
+                 **legacy):
         if config is not None and legacy:
             raise TypeError(
                 f"pass either config=ServeConfig(...) or legacy keywords, "
@@ -260,6 +261,28 @@ class PagedEngine:
             1, self.num_shards, per_device=True)["unicast"]
         self.kernel_calls: Counter[str] = Counter()  # per _dispatch name
 
+        # sampling + speculative decoding (PR 10): the token choice is
+        # one Sampler everywhere (admission, decode, verify-accept);
+        # with spec_k > 0 a draft proposer runs ahead of the target and
+        # `_step_spec` verifies k proposals in ONE chunked decode_step —
+        # the supertile kernel's multicast KV fetch amortized across the
+        # whole burst
+        self.sampler = sampler if sampler is not None else \
+            sampling.get_sampler(config.sampler)
+        self.spec_k = config.spec_k
+        self.spec = None
+        if config.spec_k:
+            from repro.serve import spec as spec_mod  # lazy: spec imports us
+            self.spec = spec_mod.make_draft(
+                config, cfg, draft=draft, max_slots=self.max_batch,
+                cache_len=self.cache_len, sampler=self.sampler,
+                kernel_calls=self.kernel_calls)
+        self.n_spec_rounds = 0
+        self.n_spec_drafted = 0
+        self.n_spec_accepted = 0
+        self.n_spec_rollbacks = 0
+        self.n_spec_rollback_pages = 0
+
         # degradation state: detectors are opt-in flags; the counters
         # below surface in stats() so a degraded-but-alive server is
         # visible rather than silently slow
@@ -300,10 +323,16 @@ class PagedEngine:
             "decode": decode,
             "cold_prefill": cold_prefill,
             "suffix_prefill": suffix_prefill,
+            # verify is the decode math at s = spec_k + 1: one chunked
+            # decode_step scoring every draft token at its true position
+            # — its own dispatch name so kernel_calls / traces / the
+            # analyzer separate verification from plain decode
+            "verify": decode,
         }
         self._decode = jax.jit(decode, donate_argnums=donate)
         self._cold_prefill = jax.jit(cold_prefill, donate_argnums=donate)
         self._suffix_prefill = jax.jit(suffix_prefill, donate_argnums=donate)
+        self._verify = jax.jit(decode, donate_argnums=donate)
         self._ref_jits: dict[str, object] = {}  # lazy reference-backend twins
 
         def copy_page(caches, src, dst):
@@ -612,7 +641,8 @@ class PagedEngine:
             self._corrupt_page(pages[min(f.page_index, n_tree - 1)])
         self.slots[slot] = _Slot(
             req=req, pages=pages, length=len(tokens),
-            last_tok=req.out[-1] if replay else int(jnp.argmax(logits[0, -1])),
+            last_tok=(req.out[-1] if replay
+                      else int(self.sampler.select(logits)[0, -1])),
             admit_seq=self._admit_seq, shard=shard,
         )
         self._admit_seq += 1
@@ -791,41 +821,49 @@ class PagedEngine:
                 return None
             self._preempt(victim)
 
-    def _ensure_writable(self, slot: int) -> bool:
-        """Before a decode step writes position ``length``: make sure the
+    def _ensure_writable(self, slot: int, n: int = 1) -> bool:
+        """Before a decode step writes positions ``length .. length+n-1``
+        (``n > 1`` for a speculative verify burst): make sure every
         covering page exists in the slot's table and is exclusively
         owned (COW).  Returns False when the slot could not be made
         writable and was requeued instead (degradation — the step
-        proceeds without it)."""
+        proceeds without it).  ``n=1`` is the pre-PR 10 single-write
+        path, page for page."""
         st = self.slots[slot]
-        need = st.length // self.page_size
-        if need >= self.table_width:
+        last = (st.length + n - 1) // self.page_size
+        if last >= self.table_width:
             raise RuntimeError(f"request {st.req.rid} overran cache_len")
-        if need >= len(st.pages):
-            got = self._alloc_for_decode(1, exclude={slot}, shard=st.shard)
-            if got is None:
-                self._requeue_degraded(slot, "page fault with pool exhausted")
-                return False
-            st.pages.extend(got)
-        elif self.pool.refcount(st.pages[need]) > 1:
-            # the private copy lands on the slot's own shard — a forked
-            # child routed cross-shard localises its divergence here
-            res = self.pool.cow(st.pages[need], st.shard)
-            if res is None:  # pool dry: make room, then retry the COW
+        for need in range(st.length // self.page_size, last + 1):
+            if need >= len(st.pages):
                 got = self._alloc_for_decode(1, exclude={slot}, shard=st.shard)
-                if got is not None:
-                    self.pool.release(got)
-                    res = self.pool.cow(st.pages[need], st.shard)
-            if res is None:
-                self._requeue_degraded(slot, "COW failure with pool exhausted")
-                return False
-            new_id, copied = res
-            if copied:
-                self.caches = self._copy_page(
-                    self.caches, jnp.int32(st.pages[need]), jnp.int32(new_id)
-                )
-                self.n_cow += 1
-            st.pages[need] = new_id
+                if got is None:
+                    self._requeue_degraded(
+                        slot, "page fault with pool exhausted")
+                    return False
+                st.pages.extend(got)
+            elif self.pool.refcount(st.pages[need]) > 1:
+                # the private copy lands on the slot's own shard — a
+                # forked child routed cross-shard localises its
+                # divergence here
+                res = self.pool.cow(st.pages[need], st.shard)
+                if res is None:  # pool dry: make room, then retry the COW
+                    got = self._alloc_for_decode(
+                        1, exclude={slot}, shard=st.shard)
+                    if got is not None:
+                        self.pool.release(got)
+                        res = self.pool.cow(st.pages[need], st.shard)
+                if res is None:
+                    self._requeue_degraded(
+                        slot, "COW failure with pool exhausted")
+                    return False
+                new_id, copied = res
+                if copied:
+                    self.caches = self._copy_page(
+                        self.caches, jnp.int32(st.pages[need]),
+                        jnp.int32(new_id)
+                    )
+                    self.n_cow += 1
+                st.pages[need] = new_id
         return True
 
     # -- main loop ----------------------------------------------------------
@@ -842,6 +880,18 @@ class PagedEngine:
         return out
 
     def _step_impl(self) -> list[Request]:
+        if self.spec is not None and self.slots:
+            # per-round draft width: k proposals need k+1 scored
+            # positions, and the LAST committed token of a request must
+            # come from a step whose width its budget allows — clamp k
+            # so no slot can overshoot max_new, and fall through to the
+            # plain path when even k=1 doesn't fit (this keeps the
+            # near-finish tail token-identical to non-speculative runs)
+            k = min(self.spec_k,
+                    min(st.req.max_new - len(st.req.out)
+                        for st in self.slots.values()) - 1)
+            if k >= 1:
+                return self._step_spec(k)
         for slot in sorted(self.slots, key=lambda s: self.slots[s].admit_seq):
             if slot in self.slots:  # a page fault may preempt later slots
                 self._ensure_writable(slot)
@@ -861,7 +911,7 @@ class PagedEngine:
             self.params, self.caches, jnp.asarray(toks), jnp.asarray(index),
             jnp.asarray(table), jnp.asarray(lengths),
         )
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        nxt = self.sampler.select(logits)[:, -1]
         finished = []
         for slot, st in list(self.slots.items()):
             st.length += 1
@@ -871,6 +921,101 @@ class PagedEngine:
                 finished.append(st.req)
                 self.pool.release(st.pages)
                 del self.slots[slot]
+        return finished
+
+    def _step_spec(self, k: int) -> list[Request]:
+        """One speculative verify-accept round: the draft proposes ``k``
+        tokens per slot, the target scores all of them (plus the pending
+        token) in ONE chunked ``decode_step`` — the supertile kernel's
+        single multicast KV fetch per chunk, now on the decode hot path
+        — and each slot commits the longest accepted prefix.
+
+        Indexing: the verify call feeds ``[last_tok, d_1..d_k]`` at
+        ``index = length``; scored position ``i`` predicts the token
+        *after* draft ``i``, so the sampler's choice at position ``i``
+        is the ground truth draft ``i+1`` is checked against.  A round
+        commits ``c = min(a+1, k)`` target tokens (``a`` = accepted
+        drafts): the ``a+1``-th is the free token every verify step
+        yields; capping at ``k`` keeps the draft cache exactly one
+        pending token behind (uniform lag — no catch-up widths).
+
+        Rollback: rejected drafts wrote real K/V into real pages, but
+        ``lengths`` masks them and any page past the committed length is
+        released here — every such page was made exclusively owned by
+        ``_ensure_writable`` (fresh or COW), so the release keeps pool
+        refcounts, prefix chains, and ``check()`` audits exactly green.
+        """
+        from repro.serve.spec import SlotView  # lazy: spec imports engine
+        for slot in sorted(self.slots, key=lambda s: self.slots[s].admit_seq):
+            if slot in self.slots:  # a page fault may preempt later slots
+                self._ensure_writable(slot, k + 1)
+        if not self.slots:
+            return []
+        views = {
+            slot: SlotView(rid=st.req.rid,
+                           tokens=tuple(st.req.prompt) + tuple(st.req.out),
+                           length=st.length)
+            for slot, st in self.slots.items()
+        }
+        drafts = np.asarray(self.spec.propose(views, k), np.int32)
+        toks = np.zeros((self.max_batch, k + 1), np.int32)
+        index = np.zeros(self.max_batch, np.int32)
+        lengths = np.zeros(self.max_batch, np.int32)
+        table = np.zeros((self.max_batch, self.table_width), np.int32)
+        for slot, st in self.slots.items():
+            toks[slot, 0] = st.last_tok
+            toks[slot, 1:] = drafts[slot]
+            index[slot] = st.length
+            lengths[slot] = st.length + k + 1
+            table[slot] = self._table_row(st.pages)
+        logits, self.caches = self._dispatch(
+            "verify",
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray(index),
+            jnp.asarray(table), jnp.asarray(lengths),
+        )
+        target = self.sampler.select(logits)        # (max_batch, k+1)
+        accepted = self.sampler.verify(drafts, target)
+        finished = []
+        new_lengths: dict[int, int] = {}
+        n_accepted = n_committed = n_rollback_pages = 0
+        for slot, st in list(self.slots.items()):
+            a = int(accepted[slot])
+            c = min(a + 1, k, st.req.max_new - len(st.req.out))
+            st.req.out.extend(int(t) for t in target[slot, :c])
+            st.length += c
+            st.last_tok = int(target[slot, c - 1])
+            self.n_spec_drafted += k
+            self.n_spec_accepted += a
+            n_accepted += a
+            n_committed += c
+            # trim the pages only the rejected tail reached — all of
+            # them exclusively owned (see docstring), so releasing them
+            # restores the exact page invariant of a plain decode step
+            keep = (st.length - 1) // self.page_size + 1
+            if keep < len(st.pages):
+                self.pool.release(st.pages[keep:])
+                n_rollback_pages += len(st.pages) - keep
+                self.n_spec_rollback_pages += len(st.pages) - keep
+                del st.pages[keep:]
+            if a < k:
+                self.n_spec_rollbacks += 1
+            if len(st.req.out) >= st.req.max_new:
+                finished.append(st.req)
+                self.pool.release(st.pages)
+                del self.slots[slot]
+                self.spec.forget(slot)
+            else:
+                new_lengths[slot] = st.length
+        self.spec.observe(new_lengths)
+        self.n_spec_rounds += 1
+        rec = trace.active()
+        if rec is not None:
+            rec.instant("spec.verify", cat="engine", args={
+                "k": k, "n_slots": len(views),
+                "drafted": k * len(views), "accepted": n_accepted,
+                "committed": n_committed,
+                "rollback_pages": n_rollback_pages,
+            })
         return finished
 
     def run(self, requests: list[Request]) -> list[Request]:
@@ -936,6 +1081,12 @@ class PagedEngine:
             "broadcast_pages": self.n_broadcast_pages,
             "broadcast_payload_bytes": self.broadcast_payload_bytes,
             "broadcast_fabric_bytes": self.broadcast_fabric_bytes,
+            "spec_rounds": self.n_spec_rounds,
+            "spec_drafted": self.n_spec_drafted,
+            "spec_accepted": self.n_spec_accepted,
+            "spec_rollbacks": self.n_spec_rollbacks,
+            "spec_rollback_pages": self.n_spec_rollback_pages,
+            "accept_rate": self.n_spec_accepted / max(1, self.n_spec_drafted),
         }
         for s in range(self.num_shards):
             out[f"shard{s}_free_pages"] = self.pool.free_pages_on(s)
@@ -946,7 +1097,8 @@ class PagedEngine:
     # stats() keys that are point-in-time gauges, not cumulative counters:
     # stats_delta reports their current value rather than a difference
     _STAT_GAUGES = frozenset(
-        {"free_pages", "prefix_pages", "peak_in_use", "num_shards"})
+        {"free_pages", "prefix_pages", "peak_in_use", "num_shards",
+         "accept_rate"})
     # every per-shard stat is a point-in-time occupancy gauge; matching
     # the whole family (rather than one hand-listed suffix) keeps new
     # shard{s}_* keys from silently passing through as counter deltas

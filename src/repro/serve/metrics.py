@@ -250,6 +250,16 @@ class ServeMetrics:
         snap["broadcast_pages"] = 0
         snap["broadcast_payload_bytes"] = 0
         snap["broadcast_fabric_bytes"] = 0
+        # speculative-decoding surface (PR 10): same contract as the
+        # broadcast family — always present, cumulative run totals; the
+        # matching per-window deltas ride along as engine_spec_* via
+        # stats_delta.  A speculative tick commits its whole accepted
+        # burst with one timestamp, so intra-burst ITL gaps record as
+        # ~0 — the stream truth, not an artifact.
+        snap["spec_drafted"] = 0
+        snap["spec_accepted"] = 0
+        snap["spec_rollbacks"] = 0
+        snap["accept_rate"] = 0.0
         if engine is not None:
             snap["num_shards"] = engine.num_shards
             snap["mcast_mode"] = engine.mcast_mode
@@ -257,6 +267,11 @@ class ServeMetrics:
             snap["broadcast_pages"] = engine.n_broadcast_pages
             snap["broadcast_payload_bytes"] = engine.broadcast_payload_bytes
             snap["broadcast_fabric_bytes"] = engine.broadcast_fabric_bytes
+            snap["spec_drafted"] = engine.n_spec_drafted
+            snap["spec_accepted"] = engine.n_spec_accepted
+            snap["spec_rollbacks"] = engine.n_spec_rollbacks
+            snap["accept_rate"] = (
+                engine.n_spec_accepted / max(1, engine.n_spec_drafted))
             for s in range(engine.num_shards):
                 free = engine.pool.free_pages_on(s)
                 snap[f"shard{s}_free_pages"] = free
@@ -309,6 +324,10 @@ SNAPSHOT_SCHEMA: dict[str, type | tuple] = {
     "broadcast_pages": _INT,
     "broadcast_payload_bytes": _NUM,
     "broadcast_fabric_bytes": _NUM,
+    "spec_drafted": _INT,
+    "spec_accepted": _INT,
+    "spec_rollbacks": _INT,
+    "accept_rate": _NUM,
 }
 
 # dynamic key families (per-reason / per-site / per-engine-counter /

@@ -1,0 +1,110 @@
+"""The sampling decision, extracted into one typed interface.
+
+Until PR 10 the token choice was a hard-coded greedy argmax scattered
+across three call sites (`PagedEngine._admit` / `PagedEngine._step`,
+and both the admission and decode paths of the dense
+``launch/serve.py`` server).  Speculative decoding needs the decision
+in exactly one place, because verify-accept *composes over it*: the
+target model scores k draft tokens in one chunked ``decode_step``, the
+sampler selects the target token at every scored position, and the
+acceptance rule keeps the longest prefix where the draft's proposal
+matches what the sampler would have chosen anyway.  Under
+:class:`GreedySampler` that rule is exact-match, which is what makes
+speculative output provably token-identical to plain greedy.
+
+:class:`Sampler` is the interface; engines take a ``sampler=`` (built
+from ``ServeConfig.sampler`` via :func:`get_sampler`).  The old
+hard-coded form survives as :func:`greedy_token`, shimmed with the
+``config_from_legacy``-style once-per-call-site deprecation warning.
+"""
+from __future__ import annotations
+
+import sys
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+
+SAMPLERS = ("greedy",)
+
+
+class Sampler:
+    """Chooses the next token at every scored position.
+
+    ``select`` is the single decision point; ``verify`` is the
+    speculative acceptance rule composed over it (how many draft
+    proposals match what ``select`` chose).  Stochastic samplers would
+    override both — ``verify`` with the rejection-sampling rule — but
+    greedy's exact-match form is the correctness bar for this stack:
+    it keeps speculative streams bitwise-equal to plain decode.
+    """
+
+    #: ServeConfig spelling of this sampler (``get_sampler`` key).
+    name: str = "abstract"
+
+    def select(self, logits) -> np.ndarray:
+        """``(batch, s, vocab)`` logits -> ``(batch, s)`` int32 token
+        ids, one choice per scored position."""
+        raise NotImplementedError
+
+    def verify(self, drafts: np.ndarray, target: np.ndarray) -> np.ndarray:
+        """Per-row count of accepted draft tokens.
+
+        ``drafts`` is ``(batch, k)`` proposed ids; ``target`` is the
+        ``(batch, k+1)`` output of :meth:`select` on the verify-step
+        logits (position ``i`` scores the context *through* draft
+        ``i``, so ``target[:, i]`` is the token the target model wants
+        where draft ``i+1`` sits).  Accepted count = length of the
+        leading run where ``drafts[:, i] == target[:, i]``.
+        """
+        drafts = np.asarray(drafts)
+        target = np.asarray(target)
+        if target.shape[1] != drafts.shape[1] + 1:
+            raise ValueError(
+                f"verify: target must score k+1={drafts.shape[1] + 1} "
+                f"positions, got {target.shape[1]}")
+        match = drafts == target[:, :-1]
+        # argmin finds the first False (= first rejection); an all-True
+        # row argmins to 0, hence the explicit full-acceptance case.
+        return np.where(match.all(axis=1), drafts.shape[1],
+                        match.argmin(axis=1)).astype(np.int32)
+
+
+class GreedySampler(Sampler):
+    """Deterministic argmax — ties break to the lowest token id, the
+    same rule every pre-PR 10 call site used, so extraction is bitwise
+    neutral."""
+
+    name = "greedy"
+
+    def select(self, logits) -> np.ndarray:
+        return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+
+def get_sampler(name: str) -> Sampler:
+    """``ServeConfig.sampler`` string -> :class:`Sampler` instance."""
+    if name == "greedy":
+        return GreedySampler()
+    raise ValueError(f"unknown sampler {name!r} (have {SAMPLERS})")
+
+
+# -- legacy shim -------------------------------------------------------
+
+#: (filename, lineno) call sites already warned — the per-site variant
+#: of the ``config_from_legacy`` migration contract.
+_LEGACY_WARNED: set[tuple[str, int]] = set()
+
+
+def greedy_token(logits) -> int:
+    """Deprecated: the old inline ``int(jnp.argmax(logits[0, -1]))``
+    admission-site pattern.  Warns once per call site; new code asks a
+    :class:`Sampler` instead (``sampler.select(logits)[0, -1]``)."""
+    frame = sys._getframe(1)
+    site = (frame.f_code.co_filename, frame.f_lineno)
+    if site not in _LEGACY_WARNED:
+        _LEGACY_WARNED.add(site)
+        warnings.warn(
+            "serve.sampling.greedy_token is deprecated; build a Sampler "
+            "(serve.sampling.get_sampler) and call sampler.select",
+            DeprecationWarning, stacklevel=2)
+    return int(GreedySampler().select(logits)[0, -1])

@@ -168,6 +168,7 @@ class ServeLoop:
         self._warm_cold: set[int] = set()
         self._warm_suffix: set[int] = set()
         self._warm_decode = False
+        self._warm_verify = False
         self._threads = [
             threading.Thread(target=self._prefill_worker,
                              name="serve-prefill", daemon=True),
@@ -471,6 +472,25 @@ class ServeLoop:
                 self._warm_decode = True
                 self.metrics.record_bucket_compile()
                 n += 1
+            if decode and eng.spec is not None and not self._warm_verify:
+                # the speculative tick's programs: the s = spec_k + 1
+                # verify step (against the null page) plus the draft's
+                # own prefill buckets and s=1 decode
+                _, eng.caches = eng._verify(
+                    eng.params, eng.caches,
+                    jnp.zeros((eng.max_batch, eng.spec_k + 1), jnp.int32),
+                    jnp.zeros(eng.max_batch, jnp.int32),
+                    jnp.zeros((eng.max_batch, eng.table_width), jnp.int32),
+                    jnp.full(eng.max_batch, eng.spec_k + 1, jnp.int32),
+                )
+                self._warm_verify = True
+                self.metrics.record_bucket_compile()
+                n += 1
+                buckets = {bucket_len(ln, eng.prompt_bucket)
+                           for ln in prompt_lens}
+                for _ in range(eng.spec.warmup(buckets, eng.spec_k)):
+                    self.metrics.record_bucket_compile()
+                    n += 1
         if rec is not None and n:
             rec.complete("compile.warmup", t0, self.clock(), cat="serve",
                          args={"programs": n})

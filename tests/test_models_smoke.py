@@ -132,6 +132,7 @@ _EXPECTED_B = {
     "recurrentgemma-2b": (2.0, 3.1),
     "deepseek-7b": (6.5, 7.3),
     "qwen1.5-0.5b": (0.4, 0.65),
+    "qwen1.5-1.8b": (1.6, 2.0),
     "command-r-35b": (28.0, 37.0),
     "gemma2-9b": (8.5, 10.0),
     "whisper-medium": (0.7, 0.9),
